@@ -1,0 +1,38 @@
+"""Kernel microbenches: Pallas segsum (interpret) correctness sweep + the
+XLA path wall-clock (the deployed CPU path; TPU timing needs hardware)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.utils.timing import time_fn
+
+
+def run(csv=True):
+    rng = np.random.default_rng(0)
+    if csv:
+        print("case,E,D,V,impl,us_per_call,max_abs_err")
+    for (e, d, v) in [(10_000, 16, 2_000), (100_000, 64, 10_000),
+                      (500_000, 16, 50_000)]:
+        seg = np.sort(rng.integers(0, v, e)).astype(np.int32)
+        vals = rng.normal(size=(e, d)).astype(np.float32)
+        jv, js = jnp.asarray(vals), jnp.asarray(seg)
+        exp = np.asarray(ref.segment_sum_ref(jv, js, v))
+        t_x, out_x = time_fn(
+            lambda: ops.segment_sum(jv, js, num_segments=v, impl="xla"), iters=10)
+        err_x = float(np.abs(np.asarray(out_x) - exp).max())
+        if csv:
+            print(f"segsum,{e},{d},{v},xla,{t_x*1e6:.1f},{err_x:.2e}")
+        if e <= 10_000:   # interpret mode is python-speed; correctness only
+            t_p, out_p = time_fn(
+                lambda: ops.segment_sum(jv, js, num_segments=v, impl="pallas"),
+                iters=1)
+            err_p = float(np.abs(np.asarray(out_p) - exp).max())
+            if csv:
+                print(f"segsum,{e},{d},{v},pallas_interpret,{t_p*1e6:.1f},{err_p:.2e}")
+            assert err_p < 1e-3
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Roofline report (deliverable g): the three terms per (arch x shape x
+mesh) from the dry-run artifact (results/dryrun.json).
+
+    compute    = MODEL_FLOPs / (chips x peak_FLOP/s)
+    memory     = MODEL_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+Methodology (see EXPERIMENTS.md §Roofline):
+  * FLOPs/bytes come from ANALYTIC per-cell models (launch/steps.py):
+    XLA's cost_analysis counts while/scan bodies exactly once, so raw HLO
+    numbers under-count by the trip counts of the layer/microbatch scans.
+    Raw HLO numbers are kept as secondary columns; the ratio
+    model/hlo_raw ~= total scan trip count is a structural sanity check.
+  * collective bytes are parsed from the compiled (post-SPMD) HLO with
+    while-loop trip multiplication (launch/hlo_analysis.py,
+    collective_stats_looped); shapes in SPMD HLO are per-device payloads.
+  * Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+    ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def analyze(rec: dict) -> dict:
+    t_c = rec["model_flops"] / rec["devices"] / PEAK_FLOPS
+    mb = rec.get("model_bytes_dev", 0.0) or rec["hlo_bytes"]
+    t_m = mb / HBM_BW
+    colls = rec.get("collectives_looped") or rec["collectives"]
+    t_x = colls.get("total_bytes", 0) / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                   key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "roofline_frac": t_c / bound if bound > 0 else 0.0,
+        "hlo_flops_raw": rec["hlo_flops"],
+        "scan_undercount": (rec["model_flops"] / rec["devices"] /
+                            rec["hlo_flops"]) if rec["hlo_flops"] else 0.0,
+        "peak_gib": rec.get("peak_bytes", 0) / 2**30,
+    }
+
+
+def run(path="results/dryrun.json", csv=True, mesh="16x16"):
+    if not os.path.exists(path):
+        print(f"# no dry-run artifact at {path}; run python -m repro.launch.dryrun")
+        return []
+    with open(path) as f:
+        recs = [r for r in json.load(f) if r.get("ok") and r["mesh"] == mesh]
+    rows = []
+    if csv:
+        print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+              "dominant,roofline_frac,scan_undercount,peak_GiB")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        a = analyze(r)
+        rows.append(a)
+        if csv:
+            print(f"{a['arch']},{a['shape']},{a['mesh']},"
+                  f"{a['t_compute_s']*1e3:.3f},{a['t_memory_s']*1e3:.3f},"
+                  f"{a['t_collective_s']*1e3:.3f},{a['dominant']},"
+                  f"{a['roofline_frac']:.3f},{a['scan_undercount']:.1f},"
+                  f"{a['peak_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

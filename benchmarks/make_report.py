@@ -1,0 +1,67 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the dry-run
+artifacts (baseline + optimized) and splice them into EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.bench_roofline import analyze
+
+GIB = 1 << 30
+
+
+def load(path):
+    with open(path) as f:
+        return {(r["arch"], r["shape"], r["mesh"]): r
+                for r in json.load(f) if r.get("ok")}
+
+
+def dryrun_table(opt, base):
+    lines = ["| arch : shape | kind | peak 16×16 (GiB) | peak 2×16×16 | "
+             "compile 1-pod (s) | collectives 1-pod (looped GiB) |",
+             "|---|---|---|---|---|---|"]
+    keys = sorted({(a, s) for (a, s, m) in opt})
+    for a, s in keys:
+        r1 = opt.get((a, s, "16x16"))
+        r2 = opt.get((a, s, "2x16x16"))
+        b1 = base.get((a, s, "16x16"))
+        d1 = r1["peak_bytes"] / GIB
+        note = ""
+        if b1 and abs(b1["peak_bytes"] - r1["peak_bytes"]) / max(r1["peak_bytes"], 1) > 0.15:
+            note = f" (baseline {b1['peak_bytes']/GIB:.1f})"
+        lines.append(
+            f"| {a} : {s} | {r1['kind']} | {d1:.2f}{note} | "
+            f"{r2['peak_bytes']/GIB:.2f} | {r1['compile_s']:.0f} | "
+            f"{(r1.get('collectives_looped') or r1['collectives'])['total_bytes']/GIB:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(opt):
+    lines = ["| arch : shape | t_compute | t_memory | t_collective | dominant "
+             "| roofline frac | peak GiB |",
+             "|---|---|---|---|---|---|---|"]
+    for (a, s, m) in sorted(opt):
+        if m != "16x16":
+            continue
+        r = analyze(opt[(a, s, m)])
+        def fmt(t):
+            return f"{t*1e3:.2f} ms" if t >= 1e-4 else f"{t*1e6:.0f} µs"
+        lines.append(
+            f"| {a} : {s} | {fmt(r['t_compute_s'])} | {fmt(r['t_memory_s'])} | "
+            f"{fmt(r['t_collective_s'])} | {r['dominant']} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    opt = load("results/dryrun.json")
+    base = load("results/dryrun_baseline.json")
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table(opt, base))
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table(opt))
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()

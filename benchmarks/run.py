@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+
+  bench_density  — paper Table 3 (exact vs P-Bahmani(0) vs CBDS-P)
+  bench_epsilon  — paper Table 2 (rho*/rho~ by eps + pass counts)
+  bench_scaling  — paper Figs 7-19 analog (runtime/pass scaling)
+  bench_kernels  — Pallas segsum micro-validation + XLA path timing
+  bench_roofline — three-term roofline from the dry-run artifact
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_density, bench_epsilon, bench_kernels,
+                            bench_roofline, bench_scaling)
+    for name, fn in [
+        ("bench_density (paper Table 3)", bench_density.main),
+        ("bench_epsilon (paper Table 2)", bench_epsilon.run),
+        ("bench_scaling (paper Figs 7-19)", bench_scaling.main),
+        ("bench_kernels", bench_kernels.run),
+        ("bench_roofline (single-pod)", bench_roofline.run),
+    ]:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        fn()
+        print(f"# done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

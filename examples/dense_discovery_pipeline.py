@@ -1,0 +1,72 @@
+"""End-to-end driver (deliverable b): the full production pipeline of the
+paper's system on a large synthetic graph —
+
+  generate -> shard edges over the mesh -> distributed P-Bahmani peel with
+  per-pass checkpointing -> simulated worker failure + restart -> CBDS-P
+  -> validation against the serial oracle -> report.
+
+Run with fabricated devices to exercise the multi-device path:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/dense_discovery_pipeline.py
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import cbds_np, pbahmani_np
+from repro.core.distributed import cbds_distributed
+from repro.graphs.generators import rmat
+from repro.launch.train import peel_with_restarts
+
+
+def main():
+    n_dev = len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n_dev % m == 0:
+            model = m
+            break
+    mesh = jax.make_mesh((n_dev // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"mesh: {dict(mesh.shape)} over {n_dev} device(s)")
+
+    print("generating RMAT graph (Graph500-style) ...")
+    g = rmat(15, edge_factor=8, seed=7)
+    print(f"  {g}")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ckpt = CheckpointManager(os.path.join(ckpt_dir, "peel"), keep=2)
+        t0 = time.time()
+        res = peel_with_restarts(g, mesh, eps=0.05, ckpt=ckpt,
+                                 fail_at_pass=3)   # inject a worker loss
+        t1 = time.time() - t0
+        print(f"distributed P-Bahmani(0.05) w/ checkpoint+injected failure: "
+              f"rho~={res['density']:.4f} in {res['passes']} passes "
+              f"({t1:.2f}s)")
+
+    rho_ref, _, passes_ref = pbahmani_np(g, eps=0.05)
+    assert abs(res["density"] - rho_ref) < 1e-4, "mismatch vs serial oracle"
+    assert res["passes"] == passes_ref
+    print(f"  == serial oracle ({rho_ref:.4f}, {passes_ref} passes)  OK")
+
+    t0 = time.time()
+    cb = cbds_distributed(g, mesh)
+    print(f"distributed CBDS-P: rho~={cb['density']:.4f} "
+          f"(core k*={cb['k_star']}) in {time.time()-t0:.2f}s")
+    cb_ref = cbds_np(g)
+    assert abs(cb["density"] - cb_ref["density"]) < 1e-3
+    print(f"  == serial oracle ({cb_ref['density']:.4f})  OK")
+
+    print("\npipeline complete: fault-tolerant distributed discovery "
+          "matches the serial algorithms exactly.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""DCN-v2 [arXiv:2008.13535]: 13 dense + 26 sparse features, embed_dim 16,
+3 cross layers, MLP 1024-1024-512. Tables row-sharded over 'model'."""
+from repro.configs.common import Arch, RECSYS_SHAPES
+from repro.models.recsys import DCNConfig
+
+FULL = DCNConfig(name="dcn-v2", n_dense=13, n_sparse=26, embed_dim=16,
+                 table_rows=1_000_000, n_cross_layers=3,
+                 mlp=(1024, 1024, 512))
+SMOKE = DCNConfig(name="dcn-smoke", n_dense=13, n_sparse=26, embed_dim=8,
+                  table_rows=1000, n_cross_layers=2, mlp=(64, 32))
+
+ARCH = Arch(
+    name="dcn-v2", family="recsys", full=FULL, smoke=SMOKE,
+    shapes=RECSYS_SHAPES, optimizer="adamw", source="arXiv:2008.13535",
+    note="EmbeddingBag = take + segment_sum (kernels/); tables are the "
+         "EP-analogue shard",
+)

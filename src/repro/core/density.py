@@ -1,0 +1,70 @@
+"""Density primitives shared by all densest-subgraph algorithms.
+
+Density follows the paper (Definition 1): rho(S) = |E(S)| / |S|.
+All device-side helpers operate on the padded symmetric COO arrays produced by
+:class:`repro.graphs.Graph` (sentinel vertex = n_nodes, see graphs/graph.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def degrees_from_coo(src: jax.Array, n_nodes: int) -> jax.Array:
+    """int32 [n_nodes] degrees from symmetric directed src array (padded)."""
+    ones = jnp.ones_like(src, dtype=jnp.int32)
+    deg = jax.ops.segment_sum(ones, src, num_segments=n_nodes + 1)
+    return deg[:n_nodes]
+
+
+def masked_degrees(src: jax.Array, dst: jax.Array, mask: jax.Array, n_nodes: int) -> jax.Array:
+    """Degrees within the subgraph induced by boolean vertex ``mask``."""
+    src_c = jnp.minimum(src, n_nodes)
+    live = mask[jnp.minimum(src, n_nodes - 1)] & mask[jnp.minimum(dst, n_nodes - 1)]
+    live &= (src < n_nodes) & (dst < n_nodes)
+    deg = jax.ops.segment_sum(live.astype(jnp.int32), src_c, num_segments=n_nodes + 1)
+    return deg[:n_nodes]
+
+
+def induced_edge_count(src: jax.Array, dst: jax.Array, mask: jax.Array, n_nodes: int) -> jax.Array:
+    """|E(S)| for S = mask (undirected count), int32 scalar."""
+    valid = (src < n_nodes) & (dst < n_nodes)
+    s = jnp.minimum(src, n_nodes - 1)
+    d = jnp.minimum(dst, n_nodes - 1)
+    live = valid & mask[s] & mask[d]
+    return jnp.sum(live.astype(jnp.int32)) // 2
+
+
+def subgraph_density(src: jax.Array, dst: jax.Array, mask: jax.Array, n_nodes: int) -> jax.Array:
+    """rho(S) as float32; 0 for empty S."""
+    ne = induced_edge_count(src, dst, mask, n_nodes)
+    nv = jnp.sum(mask.astype(jnp.int32))
+    return jnp.where(nv > 0, ne.astype(jnp.float32) / jnp.maximum(nv, 1), 0.0)
+
+
+def density_np(n_edges: int, n_nodes: int) -> float:
+    return n_edges / max(n_nodes, 1)
+
+
+def check_approx_bound(approx: float, exact: float, alpha: float, tol: float = 1e-5) -> bool:
+    """Definition 3: alpha-approximation iff rho(S~) >= rho*/alpha."""
+    return approx >= exact / alpha - tol
+
+
+def peel_threshold(n_e: jax.Array, n_v: jax.Array, eps: float) -> jax.Array:
+    """Bahmani peeling threshold 2(1+eps)·rho as float32 (see DESIGN §2 on
+    precision: comparisons are float32; exact for bench-sized integer counts)."""
+    rho = n_e.astype(jnp.float32) / jnp.maximum(n_v.astype(jnp.float32), 1.0)
+    return 2.0 * (1.0 + eps) * rho
+
+
+__all__ = [
+    "degrees_from_coo",
+    "masked_degrees",
+    "induced_edge_count",
+    "subgraph_density",
+    "density_np",
+    "check_approx_bound",
+    "peel_threshold",
+]

@@ -1,0 +1,251 @@
+"""Distributed densest-subgraph engine: shard_map over an edge-sharded mesh.
+
+The pod-scale formulation of the paper's shared-memory algorithm
+(DESIGN.md §2): edges are sharded across every mesh axis (the device pool is
+one big flat worker set for graph work); the |V|-sized degree/mask state is
+replicated. One peeling pass is
+
+    per-device   local_delta[v] = sum over local edges (u,v) of failed[u]
+    cross-chip   delta = psum(local_delta)         <- the paper's atomicSub
+    replicated   deg' = deg - delta; masks, counts, density bookkeeping
+
+i.e. the paper's part-1/part-2 split with the barrier realized as one
+all-reduce. The same engine runs P-Bahmani (threshold = 2(1+eps)·rho) and
+the PKC level fixpoint (threshold = k), so CBDS-P phase 1 distributes for
+free; phase 2 is two more segment-sums over the same sharded edges.
+
+Fault tolerance: the loop state (deg/active/best/k/pass) is a tiny
+checkpoint — ``launch.train.peel_with_restarts`` snapshots it every pass and
+resumes after a simulated failure (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.pbahmani import PeelState, init_state
+from repro.core.density import peel_threshold
+from repro.graphs.graph import Graph
+
+
+def edge_sharding(mesh) -> NamedSharding:
+    """Edges sharded over ALL mesh axes (flat worker pool)."""
+    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def shard_edges(graph: Graph, mesh):
+    """Pad edge arrays to the device count and device_put them sharded."""
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    e = graph.src.shape[0]
+    pad = (-e) % n_dev
+    sentinel = graph.n_nodes
+    src = np.concatenate([graph.src, np.full(pad, sentinel, np.int32)])
+    dst = np.concatenate([graph.dst, np.full(pad, sentinel, np.int32)])
+    sh = edge_sharding(mesh)
+    return jax.device_put(src, sh), jax.device_put(dst, sh)
+
+
+def _local_delta(failed, active, src_l, dst_l, n_nodes, axes):
+    """Per-device failed-neighbor counts + removed-edge count; psum'd."""
+    src_c = jnp.minimum(src_l, n_nodes - 1)
+    dst_c = jnp.minimum(dst_l, n_nodes - 1)
+    valid = (src_l < n_nodes) & (dst_l < n_nodes)
+    live = valid & active[src_c] & active[dst_c]
+    fail_s = failed[src_c] & live
+    fail_d = failed[dst_c] & live
+    delta = jax.ops.segment_sum(
+        fail_s.astype(jnp.int32), jnp.minimum(dst_l, n_nodes),
+        num_segments=n_nodes + 1)[:n_nodes]
+    removed = jnp.sum((fail_s | fail_d).astype(jnp.int32))
+    delta = jax.lax.psum(delta, axes)       # the cross-chip "atomicSub"
+    removed = jax.lax.psum(removed, axes)
+    return delta, removed
+
+
+def make_peel_pass(mesh, n_nodes: int, eps: float):
+    """Returns a jittable (state, src_sharded, dst_sharded) -> state pass."""
+    axes = tuple(mesh.axis_names)
+
+    def body(state: PeelState, src_l, dst_l) -> PeelState:
+        thr = peel_threshold(state.n_e, state.n_v, eps)
+        failed = state.active & (state.deg.astype(jnp.float32) <= thr)
+        delta, removed = _local_delta(failed, state.active, src_l, dst_l,
+                                      n_nodes, axes)
+        active_new = state.active & ~failed
+        deg_new = jnp.where(active_new, state.deg - delta, 0).astype(jnp.int32)
+        n_e_new = state.n_e - removed // 2
+        n_v_new = state.n_v - jnp.sum(failed.astype(jnp.int32))
+        rho_new = jnp.where(
+            n_v_new > 0,
+            n_e_new.astype(jnp.float32) / jnp.maximum(n_v_new, 1), 0.0)
+        better = rho_new > state.best_density
+        return PeelState(
+            deg=deg_new, active=active_new, n_v=n_v_new, n_e=n_e_new,
+            best_density=jnp.where(better, rho_new, state.best_density),
+            best_mask=jnp.where(better, active_new, state.best_mask),
+            passes=state.passes + 1,
+        )
+
+    state_spec = PeelState(deg=P(), active=P(), n_v=P(), n_e=P(),
+                           best_density=P(), best_mask=P(), passes=P())
+    return jax.shard_map(body, mesh=mesh,
+                     in_specs=(state_spec, P(axes), P(axes)),
+                     out_specs=state_spec, check_vma=False)
+
+
+def pbahmani_distributed(graph: Graph, mesh, eps: float = 0.0,
+                         max_passes: int | None = None
+                         ) -> tuple[float, np.ndarray, int]:
+    """Multi-device P-Bahmani. Same results as core.pbahmani (tested)."""
+    src, dst = shard_edges(graph, mesh)
+    peel_pass = make_peel_pass(mesh, graph.n_nodes, eps)
+
+    @jax.jit
+    def run(src, dst):
+        state = init_state(src, dst, graph.n_nodes, graph.n_edges)
+
+        def cond(s):
+            c = s.n_v > 0
+            if max_passes is not None:
+                c = c & (s.passes < max_passes)
+            return c
+
+        return jax.lax.while_loop(cond, lambda s: peel_pass(s, src, dst), state)
+
+    final = run(src, dst)
+    return float(final.best_density), np.asarray(final.best_mask), int(final.passes)
+
+
+# ---------------------------------------------------------------------------
+# distributed k-core (CBDS-P phase 1) and phase-2 augmentation
+# ---------------------------------------------------------------------------
+class DistCoreState(NamedTuple):
+    k: jax.Array
+    deg: jax.Array
+    active: jax.Array
+    coreness: jax.Array
+    n_v: jax.Array
+    n_e: jax.Array
+    best_density: jax.Array
+    best_k: jax.Array
+    best_n_v: jax.Array
+    best_n_e: jax.Array
+
+
+def make_kcore_level(mesh, n_nodes: int):
+    axes = tuple(mesh.axis_names)
+
+    def body(s: DistCoreState, src_l, dst_l) -> DistCoreState:
+        failed = s.active & (s.deg <= s.k)
+        delta, removed = _local_delta(failed, s.active, src_l, dst_l,
+                                      n_nodes, axes)
+        active_new = s.active & ~failed
+        return s._replace(
+            deg=jnp.where(active_new, s.deg - delta, 0).astype(jnp.int32),
+            active=active_new,
+            coreness=jnp.where(failed, s.k, s.coreness).astype(jnp.int32),
+            n_v=s.n_v - jnp.sum(failed.astype(jnp.int32)),
+            n_e=s.n_e - removed // 2,
+        )
+
+    spec = DistCoreState(*(P() for _ in DistCoreState._fields))
+    return jax.shard_map(body, mesh=mesh, in_specs=(spec, P(axes), P(axes)),
+                     out_specs=spec, check_vma=False)
+
+
+def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
+    """Multi-device CBDS-P (phases 1+2). Matches core.cbds (tested)."""
+    n = graph.n_nodes
+    axes = tuple(mesh.axis_names)
+    src, dst = shard_edges(graph, mesh)
+    level = make_kcore_level(mesh, n)
+
+    def augment_body(member, m_v, m_e, src_l, dst_l):
+        rho = m_e.astype(jnp.float32) / jnp.maximum(m_v, 1).astype(jnp.float32)
+        src_c = jnp.minimum(src_l, n - 1)
+        dst_c = jnp.minimum(dst_l, n - 1)
+        valid = (src_l < n) & (dst_l < n)
+        into = valid & member[dst_c] & ~member[src_c]
+        e_into = jax.ops.segment_sum(
+            into.astype(jnp.int32), jnp.minimum(src_l, n),
+            num_segments=n + 1)[:n]
+        e_into = jax.lax.psum(e_into, axes)
+        legit = ~member & (e_into.astype(jnp.float32) > rho)
+        inter_into = jnp.sum(jnp.where(legit, e_into, 0))
+        legit_pair = valid & legit[src_c] & legit[dst_c]
+        inter_cross = jax.lax.psum(
+            jnp.sum(legit_pair.astype(jnp.int32)), axes) // 2
+        member_new = member | legit
+        return (member_new, m_v + jnp.sum(legit.astype(jnp.int32)),
+                m_e + inter_into + inter_cross)
+
+    augment = jax.shard_map(
+        augment_body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(axes), P(axes)),
+        out_specs=(P(), P(), P()), check_vma=False)
+
+    @jax.jit
+    def run(src, dst):
+        ones = jnp.ones_like(src, dtype=jnp.int32)
+        # initial degrees: distributed histogram over sharded edges
+        def deg_body(src_l):
+            d = jax.ops.segment_sum(
+                jnp.ones_like(src_l, jnp.int32), jnp.minimum(src_l, n),
+                num_segments=n + 1)[:n]
+            return jax.lax.psum(d, axes)
+        deg = jax.shard_map(deg_body, mesh=mesh, in_specs=(P(axes),),
+                        out_specs=P(), check_vma=False)(src)
+        del ones
+        s0 = DistCoreState(
+            k=jnp.asarray(0, jnp.int32), deg=deg,
+            active=jnp.ones(n, dtype=bool),
+            coreness=jnp.zeros(n, jnp.int32),
+            n_v=jnp.asarray(n, jnp.int32),
+            n_e=jnp.asarray(graph.n_edges, jnp.int32),
+            best_density=jnp.asarray(0.0, jnp.float32),
+            best_k=jnp.asarray(0, jnp.int32),
+            best_n_v=jnp.asarray(0, jnp.int32),
+            best_n_e=jnp.asarray(0, jnp.int32))
+
+        def outer_cond(s):
+            return s.n_v > 0
+
+        def outer(s):
+            density = s.n_e.astype(jnp.float32) / jnp.maximum(s.n_v, 1)
+            better = (density > s.best_density) & (s.n_v > 0)
+            s = s._replace(
+                best_density=jnp.where(better, density, s.best_density),
+                best_k=jnp.where(better, s.k, s.best_k),
+                best_n_v=jnp.where(better, s.n_v, s.best_n_v),
+                best_n_e=jnp.where(better, s.n_e, s.best_n_e))
+            s = jax.lax.while_loop(
+                lambda t: jnp.any(t.active & (t.deg <= t.k)),
+                lambda t: level(t, src, dst), s)
+            return s._replace(k=s.k + 1)
+
+        core = jax.lax.while_loop(outer_cond, outer, s0)
+        member = core.coreness >= core.best_k
+        m_v, m_e = core.best_n_v, core.best_n_e
+        for _ in range(rounds):
+            member, m_v, m_e = augment(member, m_v, m_e, src, dst)
+        density = m_e.astype(jnp.float32) / jnp.maximum(m_v, 1)
+        return core, member, jnp.maximum(density, core.best_density)
+
+    core, member, density = run(src, dst)
+    return {
+        "density": float(density),
+        "core_density": float(core.best_density),
+        "k_star": int(core.best_k),
+        "member_mask": np.asarray(member),
+        "coreness": np.asarray(core.coreness),
+    }
+
+
+__all__ = ["edge_sharding", "shard_edges", "make_peel_pass",
+           "pbahmani_distributed", "cbds_distributed", "DistCoreState",
+           "make_kcore_level"]

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    GraphBatcher, lm_token_batches, recsys_batches, gnn_batch,
+)
+
+__all__ = ["lm_token_batches", "recsys_batches", "gnn_batch", "GraphBatcher"]

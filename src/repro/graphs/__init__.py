@@ -1,0 +1,4 @@
+from repro.graphs.graph import Graph
+from repro.graphs import generators
+
+__all__ = ["Graph", "generators"]

@@ -1,0 +1,41 @@
+"""Edge partitioner for host-side sharding decisions.
+
+The device-side path (core/distributed.py) shards the padded COO arrays
+evenly — correct for any edge order. For locality-aware deployments this
+module provides (a) balanced contiguous partition bounds and (b) a
+dst-block partition that groups edges by destination-vertex block, which
+minimizes the width of the per-device segment_sum output (the hillclimb in
+EXPERIMENTS.md §Perf measures its effect on the collective term)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+
+
+def contiguous_bounds(n_items: int, n_parts: int) -> np.ndarray:
+    """[n_parts+1] split points, maximally even."""
+    base, extra = divmod(n_items, n_parts)
+    sizes = np.full(n_parts, base, dtype=np.int64)
+    sizes[:extra] += 1
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+def partition_by_dst_block(graph: Graph, n_parts: int
+                           ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reorder edges so each part's dsts fall in one contiguous vertex block.
+
+    Returns (src', dst', part_of_vertex) — with this layout the per-device
+    delta histogram is narrow (|V|/n_parts rows instead of |V|), turning the
+    psum of a full |V| vector into a reduce-scatter-sized exchange.
+    """
+    order = np.argsort(graph.dst, kind="stable")
+    src = graph.src[order].copy()
+    dst = graph.dst[order].copy()
+    bounds = contiguous_bounds(graph.n_nodes, n_parts)
+    part_of_vertex = np.searchsorted(bounds[1:], np.arange(graph.n_nodes),
+                                     side="right")
+    return src, dst, part_of_vertex.astype(np.int32)
+
+
+__all__ = ["contiguous_bounds", "partition_by_dst_block"]

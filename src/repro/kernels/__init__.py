@@ -1,0 +1,15 @@
+# Pallas TPU kernels for the compute hot spots (DESIGN.md §3):
+#   segsum.py — blocked segment-sum via one-hot MXU matmul (the paper's
+#               part-2 atomicSub, GNN message passing, EmbeddingBag)
+#   ops.py    — jit wrappers (impl="pallas"|"xla"), ref.py — jnp oracles.
+from repro.kernels.ops import peel_update, segment_embed, segment_sum
+from repro.kernels.ref import peel_update_ref, segment_embed_ref, segment_sum_ref
+
+__all__ = [
+    "peel_update",
+    "segment_embed",
+    "segment_sum",
+    "peel_update_ref",
+    "segment_embed_ref",
+    "segment_sum_ref",
+]

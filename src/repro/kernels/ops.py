@@ -1,0 +1,198 @@
+"""Jit'd public wrappers around the Pallas segment-sum core.
+
+Every op takes ``impl=`` selecting the backend:
+  * ``"pallas"``  — the TPU kernel (interpret=True on CPU; the deploy path
+                    flips interpret off via ``PALLAS_INTERPRET``).
+  * ``"xla"``     — the pure-jnp oracle (ref.py); used by the 512-device
+                    dry-run so the lowered HLO stays backend-portable.
+
+Edges must be sorted by the segment id for the Pallas path — ``Graph`` caches
+a dst-sorted view (``graphs.graph.Graph.dst_sorted``); arbitrary callers can
+pass ``presorted=False`` to sort on the fly.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.segsum import segment_sum_sorted
+
+# interpret=True everywhere except a real TPU deployment.
+_INTERPRET = os.environ.get("PALLAS_INTERPRET", "1") != "0"
+
+# ---------------------------------------------------------------------------
+# vertex-partitioned aggregation hint (EXPERIMENTS.md §Perf hillclimb #2):
+# with edges sharded across the mesh, an unconstrained segment_sum output
+# makes GSPMD all-reduce the FULL [num_segments, D] histogram (11.3 GiB/layer
+# for MACE on ogbn-products). Constraining the output to the node sharding
+# turns it into a reduce-scatter (per-device payload /n_dev); the gathers
+# where full rows are needed are D-sized and far cheaper.
+# ---------------------------------------------------------------------------
+import contextlib
+
+_SEG_OUT_HINT: list = []  # stack of (mesh, axes, min_segments)
+
+
+@contextlib.contextmanager
+def segment_output_sharding(mesh, axes: tuple, min_segments: int = 65536):
+    """Within this context, large segment_sum outputs are constrained to
+    P(axes, None...) over ``mesh`` (node-partitioned aggregation)."""
+    _SEG_OUT_HINT.append((mesh, tuple(axes), min_segments))
+    try:
+        yield
+    finally:
+        _SEG_OUT_HINT.pop()
+
+
+def _apply_seg_hint(out, num_segments: int):
+    if not _SEG_OUT_HINT:
+        return out
+    mesh, axes, min_seg = _SEG_OUT_HINT[-1]
+    if num_segments < min_seg or num_segments % __import__("math").prod(
+            mesh.shape[a] for a in axes) != 0:
+        return out
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(axes, *(None,) * (out.ndim - 1))
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, spec))
+
+
+def _hint_active(num_segments: int) -> bool:
+    if not _SEG_OUT_HINT:
+        return False
+    mesh, axes, min_seg = _SEG_OUT_HINT[-1]
+    import math
+    return (num_segments >= min_seg and
+            num_segments % math.prod(mesh.shape[a] for a in axes) == 0)
+
+
+def vp_segment_sum(values: jax.Array, seg_ids: jax.Array, num_segments: int):
+    """Vertex-partitioned segment-sum (EXPERIMENTS.md §Perf hillclimb #2).
+
+    REQUIRES edges pre-partitioned by destination block
+    (graphs.partition.partition_by_dst_block): each device along the node
+    axes owns one contiguous block of output rows, and the edges it holds
+    target only that block. The scatter is then LOCAL; the only cross-chip
+    reduction is a psum of [block, D] over the non-node axes (the edge
+    sub-shards) — vs. a full [N, D] all-reduce for unpartitioned edges
+    (measured 9x less traffic on mace:ogb_products).
+
+    Uses the active segment_output_sharding hint for (mesh, node_axes).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh, node_axes, _ = _SEG_OUT_HINT[-1]
+    all_axes = tuple(mesh.axis_names)
+    sub_axes = tuple(a for a in all_axes if a not in node_axes)
+    import math
+    n_blocks = math.prod(mesh.shape[a] for a in node_axes)
+    block = num_segments // n_blocks
+
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+
+    def local(vals_l, ids_l):
+        idx = jnp.asarray(0, jnp.int32)
+        for a in node_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        start = idx * block
+        rel = ids_l.astype(jnp.int32) - start
+        ok = (rel >= 0) & (rel < block)
+        v = jnp.where(ok[:, None], vals_l.astype(jnp.float32), 0.0)
+        out = jax.ops.segment_sum(v, jnp.clip(rel, 0, block - 1),
+                                  num_segments=block)
+        for a in sub_axes:
+            out = jax.lax.psum(out, a)
+        return out
+
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(all_axes, None), P(all_axes)),
+        out_specs=P(node_axes, None),
+        check_vma=False,
+    )(vals, seg_ids)
+    return out[:, 0] if squeeze else out
+
+
+@partial(jax.jit, static_argnames=("num_segments", "impl", "presorted"))
+def segment_sum(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    *,
+    num_segments: int,
+    impl: str = "pallas",
+    presorted: bool = True,
+) -> jax.Array:
+    """Deterministic segment-sum. See module docstring for ``impl``.
+    NOTE: the segment_output_sharding hint is applied by callers OUTSIDE
+    this jit (it must not leak into the jit cache key)."""
+    if impl == "xla":
+        return _ref.segment_sum_ref(values, seg_ids, num_segments)
+    if not presorted:
+        order = jnp.argsort(seg_ids)
+        seg_ids = jnp.take(seg_ids, order)
+        values = jnp.take(values, order, axis=0)
+    return segment_sum_sorted(
+        values, seg_ids, num_segments=num_segments, interpret=_INTERPRET
+    )
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "impl", "presorted"))
+def peel_update(
+    src: jax.Array,
+    dst: jax.Array,
+    failed: jax.Array,
+    *,
+    n_nodes: int,
+    impl: str = "pallas",
+    presorted: bool = True,
+) -> jax.Array:
+    """Paper part 2 (the OpenMP atomicSub loop): per-vertex count of failed
+    neighbors. ``src``/``dst`` are the symmetric COO arrays (sentinel-padded);
+    for the Pallas path they must be sorted by ``dst``."""
+    if impl == "xla":
+        return _ref.peel_update_ref(src, dst, failed, n_nodes)
+    src_c = jnp.minimum(src, n_nodes - 1)
+    valid = (src < n_nodes) & (dst < n_nodes)
+    vals = (failed[src_c] & valid).astype(jnp.float32)
+    if not presorted:
+        order = jnp.argsort(dst)
+        dst = jnp.take(dst, order)
+        vals = jnp.take(vals, order)
+    return segment_sum_sorted(vals, dst, num_segments=n_nodes, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "impl", "presorted"))
+def segment_embed(
+    table: jax.Array,
+    gather_ids: jax.Array,
+    seg_ids: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    num_segments: int,
+    impl: str = "pallas",
+    presorted: bool = True,
+) -> jax.Array:
+    """Gather + weighted segment-sum: GNN message passing & EmbeddingBag.
+
+    out[s, :] = sum over e with seg_ids[e]==s of weights[e] * table[gather_ids[e], :]
+    """
+    if impl == "xla":
+        return _ref.segment_embed_ref(table, gather_ids, seg_ids, weights, num_segments)
+    rows = jnp.take(table, jnp.minimum(gather_ids, table.shape[0] - 1), axis=0)
+    rows = rows.astype(jnp.float32)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(jnp.float32)
+    valid = (gather_ids >= 0) & (gather_ids < table.shape[0])
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    if not presorted:
+        order = jnp.argsort(seg_ids)
+        seg_ids = jnp.take(seg_ids, order)
+        rows = jnp.take(rows, order, axis=0)
+    return segment_sum_sorted(rows, seg_ids, num_segments=num_segments, interpret=_INTERPRET)
+
+
+__all__ = ["segment_sum", "peel_update", "segment_embed"]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every kernel op (the assert_allclose targets).
+
+These are also the *deployed* implementations whenever the Pallas path is
+switched off (CPU benches, the 512-device dry-run — XLA's native scatter is
+used there so the compiled HLO is hardware-portable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(values: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """out[v] = sum of values[e] over seg_ids[e] == v; ids >= V dropped.
+
+    Invalid ids are masked to zero-contributions instead of routed to a
+    sentinel row: the output is exactly [num_segments, ...], which keeps it
+    divisible by mesh axes so sharding constraints propagate into the
+    scatter (vertex-partitioned aggregation, EXPERIMENTS.md §Perf #2)."""
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    valid = (seg_ids >= 0) & (seg_ids < num_segments)
+    vals = jnp.where(valid[:, None], values.astype(jnp.float32), 0.0)
+    ids = jnp.clip(seg_ids.astype(jnp.int32), 0, num_segments - 1)
+    out = jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+    return (out[:, 0] if squeeze else out)
+
+
+def peel_update_ref(
+    src: jax.Array, dst: jax.Array, failed: jax.Array, n_nodes: int
+) -> jax.Array:
+    """Paper part 2: delta[v] = # failed neighbors of v (atomicSub analogue)."""
+    src_c = jnp.minimum(src, n_nodes - 1)
+    valid = (src < n_nodes) & (dst < n_nodes)
+    vals = (failed[src_c] & valid).astype(jnp.float32)
+    return segment_sum_ref(vals, dst, n_nodes)
+
+
+def segment_embed_ref(
+    table: jax.Array,
+    gather_ids: jax.Array,
+    seg_ids: jax.Array,
+    weights: jax.Array | None,
+    num_segments: int,
+) -> jax.Array:
+    """out[s] = sum_e w[e] * table[gather_ids[e]] over seg_ids[e] == s.
+
+    Serves GNN message passing (table = node features, gather = src,
+    seg = dst) and the recsys EmbeddingBag (table = embedding matrix,
+    gather = feature ids, seg = bag/row ids).
+    """
+    rows = jnp.take(table, jnp.minimum(gather_ids, table.shape[0] - 1), axis=0)
+    rows = rows.astype(jnp.float32)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(jnp.float32)
+    valid = (gather_ids >= 0) & (gather_ids < table.shape[0])
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    return segment_sum_ref(rows, seg_ids, num_segments)
+
+
+__all__ = ["segment_sum_ref", "peel_update_ref", "segment_embed_ref"]

@@ -1,0 +1,2 @@
+# Runtime layer: production meshes, the 40-cell dry-run, fault-tolerant
+# train loop, serving loop. See DESIGN.md §3-4.

@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+#   init. 512 host devices back both production meshes (16x16 uses 256).
+
+"""Multi-pod dry-run (deliverable e): lower + compile EVERY
+(architecture x input-shape) cell against the production meshes and record
+memory_analysis / cost_analysis / collective traffic for §Dry-run and
+§Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun                     # all 40 cells, both meshes
+  python -m repro.launch.dryrun --arch gcn-cora --shape full_graph_sm
+  python -m repro.launch.dryrun --mesh pod1 --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch.hlo_analysis import collective_stats, collective_stats_looped
+from repro.launch.mesh import make_production_mesh, n_devices
+from repro.launch.steps import all_cells, build_step
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "devices": n_devices(mesh)}
+    t0 = time.time()
+    try:
+        bundle = build_step(arch, shape, mesh)
+        lowered = bundle.lower(mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        hlo_txt = compiled.as_text()
+        colls = collective_stats(hlo_txt)
+        colls_looped = collective_stats_looped(hlo_txt)
+        rec.update(
+            ok=True, kind=bundle.kind,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            # per-device bytes (memory_analysis is per-device on SPMD)
+            arg_bytes=int(ma.argument_size_in_bytes),
+            out_bytes=int(ma.output_size_in_bytes),
+            temp_bytes=int(ma.temp_size_in_bytes),
+            alias_bytes=int(ma.alias_size_in_bytes),
+            peak_bytes=int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            # per-device HLO flops/bytes
+            hlo_flops=float(ca.get("flops", 0.0)),
+            hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+            collectives=colls,
+            collectives_looped=colls_looped,
+            model_flops=float(bundle.meta.get("model_flops", 0.0)),
+            model_bytes_dev=float(bundle.meta.get("model_bytes_dev", 0.0)),
+            meta={k: v for k, v in bundle.meta.items() if k != "model_flops"},
+        )
+        if verbose:
+            gb = 1 << 30
+            print(f"[OK] {arch}:{shape} mesh={rec['mesh']} kind={bundle.kind} "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+            print(f"     mem/device: args={rec['arg_bytes']/gb:.2f}GiB "
+                  f"temp={rec['temp_bytes']/gb:.2f}GiB "
+                  f"peak~{rec['peak_bytes']/gb:.2f}GiB")
+            print(f"     hlo/device: {rec['hlo_flops']:.3e} flops, "
+                  f"{rec['hlo_bytes']:.3e} bytes; collectives: "
+                  f"{colls.get('total_bytes', 0)/gb:.3f}GiB "
+                  f"(looped {colls_looped.get('total_bytes', 0)/gb:.2f}GiB) "
+                  f"({ {k: v['count'] for k, v in colls.items() if isinstance(v, dict)} })")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch}:{shape} mesh={rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("ok")}
+    for arch, shape in cells:
+        for mp in meshes:
+            key = (arch, shape, "2x16x16" if mp else "16x16")
+            if key in done:
+                print(f"[skip] {key} already done")
+                continue
+            rec = run_cell(arch, shape, mp)
+            results = [r for r in results
+                       if (r["arch"], r["shape"], r["mesh"]) != key]
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n== dry-run: {n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

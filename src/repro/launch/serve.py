@@ -1,0 +1,62 @@
+"""Batched serving loop (prefill -> decode) for the LM family.
+
+CPU-scale demonstration of the serve path the decode cells lower: a request
+queue is prefilled in one batch, then tokens are decoded step by step with
+greedy sampling. The production path is the same two compiled functions the
+dry-run lowers (launch/steps.py `prefill`/`decode`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (
+    TransformerConfig, decode_step, forward, init_cache,
+)
+
+
+@dataclass
+class ServeStats:
+    prefill_tokens: int
+    decoded_tokens: int
+    outputs: np.ndarray
+
+
+def serve_batch(params: dict, cfg: TransformerConfig, prompts: np.ndarray,
+                max_new_tokens: int = 16, greedy: bool = True,
+                seed: int = 0) -> ServeStats:
+    """prompts [B, S0] int32 -> greedy continuation [B, max_new_tokens]."""
+    b, s0 = prompts.shape
+    total = s0 + max_new_tokens
+    prompts = jnp.asarray(prompts)
+
+    logits, _aux, cache = forward(params, prompts, cfg, return_cache=True)
+    pad = total - s0
+    if cfg.attn == "mla":
+        cache = jax.tree.map(
+            lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0))), cache)
+    else:
+        cache = jax.tree.map(
+            lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            cache)
+
+    step = jax.jit(lambda p, c, t, n: decode_step(p, c, t, n, cfg))
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    out = [tok]
+    for i in range(max_new_tokens - 1):
+        lg, cache = step(params, cache, tok, jnp.asarray(s0 + i, jnp.int32))
+        if greedy:
+            tok = jnp.argmax(lg, axis=-1)
+        else:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, lg)
+        out.append(tok)
+    return ServeStats(prefill_tokens=b * s0, decoded_tokens=b * max_new_tokens,
+                      outputs=np.stack([np.asarray(t) for t in out], axis=1))
+
+
+__all__ = ["serve_batch", "ServeStats"]

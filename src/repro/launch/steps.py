@@ -1,0 +1,570 @@
+"""Step factory: (arch, shape, mesh) -> jittable step + shardings + SDS args.
+
+Every one of the 40 assigned cells resolves here to a concrete function that
+``launch.dryrun`` lowers and compiles against the production mesh. Kinds:
+
+  train     (params, opt_state, *batch) -> (params', opt_state', loss)
+  prefill   (params, tokens)            -> (last_logits, kv_cache)
+  decode    (params, cache, tokens, cache_len) -> (logits, cache')
+  serve     (params, *batch)            -> logits
+  retrieval (params, *batch)            -> scores
+
+Inputs are ShapeDtypeStructs (no allocation); in/out shardings are
+NamedShardings over the supplied mesh. ``meta`` carries the analytic
+MODEL_FLOPS used by the roofline report.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.common import Arch, Shape, sampled_subgraph_dims
+from repro.launch.mesh import dp_axes, n_devices
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models.layers import ShardCtx
+from repro.models.transformer import (
+    TransformerConfig, cache_specs, decode_step, forward, init_cache,
+    init_params, loss_fn, param_specs, param_specs_zero3,
+)
+from repro.optim import adafactor, adamw, sgdm
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class StepBundle:
+    name: str
+    kind: str
+    fn: Callable
+    args_sds: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    meta: dict | None = None
+
+    def lower(self, mesh):
+        del mesh  # NamedShardings embed the mesh; no context needed
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args_sds)
+
+
+def _named(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw(3e-4)
+    if name == "adafactor":
+        return adafactor(1e-3)
+    return sgdm(1e-2)
+
+
+def _opt_state_specs(opt_name: str, p_specs, p_sds):
+    """PartitionSpec tree for the optimizer state, derived from param specs."""
+    if opt_name in ("adamw",):
+        return {"step": P(), "mu": p_specs, "nu": p_specs}
+    if opt_name == "sgdm":
+        return {"step": P(), "m": p_specs}
+    # adafactor: factored leaves -> row/col specs
+    def leaf(spec, sds):
+        shp = sds.shape
+        if len(shp) >= 2 and shp[-1] >= 128 and shp[-2] >= 128:
+            parts = list(spec) + [None] * (len(shp) - len(spec))
+            return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2] + parts[-1:]))}
+        return {"v": spec}
+    v = jax.tree.map(leaf, p_specs, p_sds, is_leaf=lambda x: isinstance(x, P))
+    return {"step": P(), "v": v}
+
+
+def _opt_state_sds(opt, p_sds):
+    return jax.eval_shape(opt.init, p_sds)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+def _lm_param_sds(cfg: TransformerConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _lm_model_flops(cfg: TransformerConfig, kind: str, batch: int, seq: int) -> float:
+    """Analytic step FLOPs: 6*N_active*D (+causal attention) for train,
+    2*N_active*D (+attention) for prefill/decode. Primary source for the
+    roofline compute term: XLA cost_analysis counts scan bodies once
+    (EXPERIMENTS.md Roofline methodology)."""
+    n_act = cfg.n_active_params()
+    if cfg.attn == "mla":
+        attn_tok = 2 * cfg.n_heads * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    else:
+        attn_tok = 4 * cfg.n_heads * cfg.hd
+    if kind == "train":
+        attn = 3 * cfg.n_layers * batch * seq * (seq / 2) * attn_tok / 2
+        return 6.0 * n_act * batch * seq + attn
+    if kind == "prefill":
+        attn = cfg.n_layers * batch * seq * (seq / 2) * attn_tok / 2
+        return 2.0 * n_act * batch * seq + attn
+    s_eff = min(seq, cfg.sliding_window or seq)
+    attn = cfg.n_layers * batch * s_eff * attn_tok
+    return 2.0 * n_act * batch + attn
+
+
+def _tree_bytes(sds_tree) -> int:
+    return sum(x.size * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(sds_tree))
+
+
+def _lm_model_bytes(cfg: TransformerConfig, kind: str, batch: int, seq: int,
+                    m: int, n_dev: int, tp: int, p_sds, cache_sds=None) -> float:
+    """Analytic per-device HBM traffic (documented +-2x napkin). Dominant
+    terms: parameter streams (fwd+bwd reads per microbatch + optimizer
+    read-modify-write), remat activation residuals, logits, KV cache."""
+    p_dev = _tree_bytes(p_sds) / n_dev
+    ab = 2  # bf16 activations
+    if kind == "train":
+        t_sp = batch * seq / max(n_dev, 1)          # tokens/device (SP)
+        param_traffic = p_dev * (4 * m + 6)
+        act = 10 * cfg.n_layers * t_sp * cfg.d_model * ab
+        logits = 3.0 * batch * seq / (n_dev / tp) * (cfg.vocab / tp) * 4
+        return param_traffic + act + logits
+    if kind == "prefill":
+        t_dev = batch * seq / n_dev
+        cache = _tree_bytes(cache_sds) / n_dev if cache_sds else 0
+        return 2 * p_dev + 8 * cfg.n_layers * t_dev * cfg.d_model * ab + cache
+    cache = _tree_bytes(cache_sds) / n_dev if cache_sds else 0
+    return p_dev + 2 * cache + batch * cfg.d_model * cfg.n_layers * ab / n_dev
+
+
+def _lm_train(arch: Arch, shape: Shape, mesh) -> StepBundle:
+    # SP training (Megatron-style): activations sequence-sharded over
+    # 'model' between layers; single-q-block flash so the sharded seq dim
+    # never reshapes (EXPERIMENTS.md §Perf documents the memory effect).
+    gb, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    # zero3 pays off only when the batch covers the whole mesh (1+ seq per
+    # device); otherwise the leftover axes replicate activations/logits
+    # (measured: qwen train 2-pod 9.5 -> 66 GiB). Fall back to tp_sp.
+    zero3 = (arch.train_layout == "zero3"
+             and gb % n_devices(mesh) == 0)
+    if zero3:
+        # pure-DP: batch over as many mesh axes as divide the global batch;
+        # no TP/SP; ZeRO-3 state sharded over the WHOLE mesh regardless.
+        # (remat stays ON: measured remat=False -> temp 9.4 -> 59.6 GiB with
+        # UNCHANGED collectives — XLA already reuses gathered weights.)
+        cfg = replace(arch.full, flash_q_chunk=min(1024, seq),
+                      flash_k_chunk=min(1024, seq))
+        axes = list(mesh.axis_names)
+        while axes and gb % math.prod(mesh.shape[a] for a in axes) != 0:
+            axes.pop()
+        dp = tuple(axes)
+        ctx = ShardCtx(mesh=mesh, dp=dp, tp=None, sp=False)
+        p_specs = param_specs_zero3(cfg, mesh)
+    else:
+        cfg = replace(arch.full, flash_q_chunk=seq,
+                      flash_k_chunk=min(1024, seq))
+        dp = dp_axes(mesh)
+        ctx = ShardCtx(mesh=mesh, dp=dp, sp=True)
+        p_specs = param_specs(cfg, mesh)
+    m = arch.microbatches
+    assert gb % m == 0
+    opt = make_optimizer(arch.optimizer)
+    grad_sh = _named(mesh, p_specs)
+
+    def _pin(tree):
+        """Keep the f32 grad accumulator sharded like the params (otherwise
+        GSPMD may replicate it: +2 x param bytes per device)."""
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_sh)
+
+    acc_dt = jnp.dtype(arch.grad_accum_dtype)
+
+    def train_step(params, opt_state, tokens, labels):
+        def micro(accum, tl):
+            tok, lab = tl
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, tok, lab, cfg, ctx, mesh))(params)
+            acc_g, acc_l = accum
+            acc_g = _pin(jax.tree.map(
+                lambda a, g: a + (g / m).astype(acc_dt), acc_g, grads))
+            return (acc_g, acc_l + loss / m), None
+
+        if m > 1:
+            toks = tokens.reshape(m, gb // m, seq)
+            labs = labels.reshape(m, gb // m, seq)
+            zero = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero, jnp.asarray(0.0, jnp.float32)), (toks, labs))
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, tokens, labels, cfg, ctx, mesh))(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+    p_sds = _lm_param_sds(cfg)
+    o_specs = _opt_state_specs(arch.optimizer, p_specs, p_sds)
+    o_sds = _opt_state_sds(opt, p_sds)
+    tok_sds = SDS((gb, seq), jnp.int32)
+    in_sh = (_named(mesh, p_specs), _named(mesh, o_specs),
+             NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp, None)))
+    out_sh = (_named(mesh, p_specs), _named(mesh, o_specs),
+              NamedSharding(mesh, P()))
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="train", fn=train_step,
+        args_sds=(p_sds, o_sds, tok_sds, tok_sds),
+        in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(0, 1),
+        meta={"model_flops": _lm_model_flops(cfg, "train", gb, seq),
+              "model_bytes_dev": _lm_model_bytes(
+                  cfg, "train", gb, seq, m, n_devices(mesh),
+                  mesh.shape["model"], p_sds),
+              "tokens": gb * seq})
+
+
+def _lm_prefill(arch: Arch, shape: Shape, mesh) -> StepBundle:
+    gb, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    cfg = replace(arch.full, flash_q_chunk=seq, flash_k_chunk=1024)
+    dp = dp_axes(mesh)
+    ctx = ShardCtx(mesh=mesh, dp=dp, sp=True)   # sequence-parallel prefill
+
+    def prefill(params, tokens):
+        logits, _aux, cache = forward(params, tokens, cfg, ctx, mesh,
+                                      return_cache=True)
+        return logits[:, -1], cache
+
+    p_specs = param_specs(cfg, mesh)
+    p_sds = _lm_param_sds(cfg)
+    if cfg.attn == "mla":
+        cache_spec = {"c_kv": P(None, dp, "model", None),
+                      "k_rope": P(None, dp, "model", None)}
+    else:
+        cache_spec = {"k": P(None, dp, "model", None, None),
+                      "v": P(None, dp, "model", None, None)}
+    in_sh = (_named(mesh, p_specs), NamedSharding(mesh, P(dp, None)))
+    out_sh = (NamedSharding(mesh, P(dp, None)), _named(mesh, cache_spec))
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="prefill", fn=prefill,
+        args_sds=(p_sds, SDS((gb, seq), jnp.int32)),
+        in_shardings=in_sh, out_shardings=out_sh,
+        meta={"model_flops": _lm_model_flops(cfg, "prefill", gb, seq),
+              "model_bytes_dev": _lm_model_bytes(
+                  cfg, "prefill", gb, seq, 1, n_devices(mesh),
+                  mesh.shape["model"], p_sds,
+                  jax.eval_shape(partial(init_cache, cfg, gb, seq))),
+              "tokens": gb * seq})
+
+
+def _lm_decode(arch: Arch, shape: Shape, mesh) -> StepBundle:
+    gb, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    long = seq > 100_000
+    cfg = arch.full
+    if long and cfg.attn != "mla":
+        cfg = replace(cfg, sliding_window=4096)   # adapted cell (DESIGN §5)
+    dp = dp_axes(mesh)
+    # gb=1 cannot shard over the batch axes -> replicated-token decode
+    ctx = ShardCtx(mesh=mesh, dp=dp if gb > 1 else ())
+    cache_len_sds = SDS((), jnp.int32)
+
+    cache_sds = jax.eval_shape(partial(init_cache, cfg, gb, seq))
+
+    all_axes = tuple(mesh.axis_names)
+    if cfg.attn == "mla":
+        seq_ax = all_axes if gb == 1 else None
+        bd = None if gb == 1 else dp
+        lat = "model" if gb > 1 else None
+        cache_spec = {"c_kv": P(None, bd, seq_ax, lat),
+                      "k_rope": P(None, bd, seq_ax, None)}
+    else:
+        bd = None if gb == 1 else dp
+        sw = cfg.sliding_window
+        seq_ax = ("data",) if (gb == 1 and sw) else None
+        cache_spec = {"k": P(None, bd, seq_ax, None, "model"),
+                      "v": P(None, bd, seq_ax, None, "model")}
+        if cfg.kv_cache_dtype == "int8":
+            # scales: one per (L, B, S, KV); kv-heads rarely divide |model|
+            cache_spec["k_scale"] = P(None, bd, seq_ax, None)
+            cache_spec["v_scale"] = P(None, bd, seq_ax, None)
+
+    def step(params, cache, tokens, cache_len):
+        return decode_step(params, cache, tokens, cache_len, cfg, ctx, mesh)
+
+    p_specs = param_specs(cfg, mesh)
+    p_sds = _lm_param_sds(cfg)
+    in_sh = (_named(mesh, p_specs), _named(mesh, cache_spec),
+             NamedSharding(mesh, P(dp if gb > 1 else None)),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(dp if gb > 1 else None, None)),
+              _named(mesh, cache_spec))
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="decode", fn=step,
+        args_sds=(p_sds, cache_sds, SDS((gb,), jnp.int32), cache_len_sds),
+        in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(1,),
+        meta={"model_flops": _lm_model_flops(cfg, "decode", gb, seq),
+              "model_bytes_dev": _lm_model_bytes(
+                  cfg, "decode", gb, seq, 1, n_devices(mesh),
+                  mesh.shape["model"], p_sds, cache_sds),
+              "tokens": gb})
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+_GNN_FNS = {
+    gnn_mod.GCNConfig: (gnn_mod.gcn_init, gnn_mod.gcn_loss),
+    gnn_mod.SchNetConfig: (gnn_mod.schnet_init, gnn_mod.schnet_loss),
+    gnn_mod.EGNNConfig: (gnn_mod.egnn_init, gnn_mod.egnn_loss),
+    gnn_mod.MACEConfig: (gnn_mod.mace_init, gnn_mod.mace_loss),
+}
+
+
+def _gnn_dims(shape: Shape, n_dev: int) -> tuple[int, int, int, int]:
+    """(n_nodes_padded, n_directed_padded, n_graphs, d_feat)."""
+    d = shape.dims
+    if shape.name == "minibatch_lg":
+        n, e = sampled_subgraph_dims(d["batch_nodes"], d["fanout"])
+        e_dir = e          # sampler emits child->parent single direction
+        feat = 602         # Reddit-style features for the sampled benchmark
+    elif shape.name == "molecule":
+        n = d["n_nodes"] * d["batch"]
+        e_dir = 2 * d["n_edges"] * d["batch"]
+        feat = 32
+    else:
+        n = d["n_nodes"]
+        e_dir = 2 * d["n_edges"]
+        feat = d.get("d_feat", 100)
+    n_pad = _round_up(n, 512)
+    e_pad = _round_up(e_dir, max(512, n_dev))
+    n_graphs = d.get("batch", 1)
+    return n_pad, e_pad, n_graphs, feat
+
+
+def _gnn_model_flops(cfg, n: int, e: int, kind_train: bool) -> float:
+    mult = 3.0 if kind_train else 1.0
+    if isinstance(cfg, gnn_mod.GCNConfig):
+        dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+        fwd = sum(2.0 * n * dims[i] * dims[i + 1] + 2.0 * e * dims[i + 1]
+                  for i in range(cfg.n_layers))
+    elif isinstance(cfg, gnn_mod.SchNetConfig):
+        dh = cfg.d_hidden
+        fwd = cfg.n_interactions * (
+            2.0 * e * (cfg.n_rbf * dh + dh * dh + 2 * dh) + 2.0 * n * 2 * dh * dh)
+    elif isinstance(cfg, gnn_mod.EGNNConfig):
+        dh = cfg.d_hidden
+        fwd = cfg.n_layers * (2.0 * e * (2 * dh + 1) * dh + 2.0 * e * dh * dh
+                              + 2.0 * n * 2 * dh * dh)
+    else:  # MACE
+        dh, m = cfg.d_hidden, (cfg.l_max + 1) ** 2
+        n_inv = (cfg.l_max + 1) * cfg.correlation
+        fwd = cfg.n_layers * (
+            2.0 * e * (cfg.n_rbf * dh + m * dh) + 2.0 * n * n_inv * dh * dh
+            + 2.0 * n * 2 * dh * dh)
+    return mult * fwd
+
+
+def _gnn_model_bytes(cfg, n: int, e: int, n_dev: int) -> float:
+    """Per-device traffic: sharded edge gathers/scatters (x3 fwd/bwd/recomp)
+    + replicated node arrays read per layer."""
+    d = getattr(cfg, "d_hidden", 16)
+    L = getattr(cfg, "n_layers", getattr(cfg, "n_interactions", 2))
+    feat = getattr(cfg, "d_feat", 0)
+    e_dev = e / n_dev
+    return 3 * (n * feat * 4 + L * (e_dev * d * 8 + n * d * 8))
+
+
+def _gnn_batch_sds(arch: Arch, shape: Shape, mesh):
+    n_dev = n_devices(mesh)
+    n, e, n_graphs, feat = _gnn_dims(shape, n_dev)
+    geometric = not isinstance(arch.full, gnn_mod.GCNConfig)
+    all_axes = tuple(mesh.axis_names)
+    big = n >= 100_000
+    node_ax = dp_axes(mesh) if big else None
+
+    sds = {
+        "src": SDS((e,), jnp.int32), "dst": SDS((e,), jnp.int32),
+        "graph_id": SDS((n,), jnp.int32),
+        "node_mask": SDS((n,), jnp.bool_),
+    }
+    spec = {
+        "src": P(all_axes), "dst": P(all_axes),
+        "graph_id": P(node_ax), "node_mask": P(node_ax),
+    }
+    if geometric:
+        sds.update(atom_type=SDS((n,), jnp.int32), pos=SDS((n, 3), jnp.float32),
+                   energy=SDS((n_graphs,), jnp.float32))
+        spec.update(atom_type=P(node_ax), pos=P(node_ax, None), energy=P())
+    else:
+        cfg = replace(arch.full, d_feat=feat)
+        sds.update(node_feat=SDS((n, feat), jnp.float32),
+                   labels=SDS((n,), jnp.int32), label_mask=SDS((n,), jnp.bool_))
+        spec.update(node_feat=P(node_ax, None), labels=P(node_ax),
+                    label_mask=P(node_ax))
+    return sds, spec, n, e, n_graphs, feat
+
+
+def _gnn_train(arch: Arch, shape: Shape, mesh) -> StepBundle:
+    batch_sds, batch_spec, n, e, n_graphs, feat = _gnn_batch_sds(arch, shape, mesh)
+    cfg = arch.full
+    if isinstance(cfg, gnn_mod.GCNConfig):
+        cfg = replace(cfg, d_feat=feat)
+    init_fn, loss_fn_ = _GNN_FNS[type(cfg)]
+    opt = make_optimizer(arch.optimizer)
+    # batch dims carried statically
+    extra = {"n_graphs": n_graphs}
+    # vp aggregation only for FULL-graph cells: the pipeline pre-partitions
+    # edges by dst block (partition_by_dst_block); sampled minibatch blocks
+    # are frontier-ordered and must keep the general path.
+    big = shape.name == "ogb_products"
+    from repro.kernels import ops as kops
+
+    def train_step(params, opt_state, batch):
+        batch = dict(batch, **extra)
+        if big:
+            # vertex-partitioned aggregation: segment_sum outputs pinned to
+            # the node sharding -> reduce-scatter instead of full all-reduce
+            # (EXPERIMENTS.md §Perf hillclimb #2)
+            with kops.segment_output_sharding(mesh, dp_axes(mesh)):
+                loss, grads = jax.value_and_grad(loss_fn_)(params, batch, cfg)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn_)(params, batch, cfg)
+        new_p, new_o = opt.update(grads, opt_state, params)
+        return new_p, new_o, loss
+
+    p_sds = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    p_specs = jax.tree.map(lambda _: P(), p_sds)   # GNN params are tiny
+    o_specs = _opt_state_specs(arch.optimizer, p_specs, p_sds)
+    o_sds = _opt_state_sds(opt, p_sds)
+    in_sh = (_named(mesh, p_specs), _named(mesh, o_specs), _named(mesh, batch_spec))
+    out_sh = (_named(mesh, p_specs), _named(mesh, o_specs), NamedSharding(mesh, P()))
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="train", fn=train_step,
+        args_sds=(p_sds, o_sds, batch_sds),
+        in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(0, 1),
+        meta={"model_flops": _gnn_model_flops(cfg, n, e, True),
+              "model_bytes_dev": _gnn_model_bytes(cfg, n, e, n_devices(mesh)),
+              "nodes": n, "edges": e})
+
+
+# ===========================================================================
+# recsys family
+# ===========================================================================
+def _recsys_step(arch: Arch, shape: Shape, mesh) -> StepBundle:
+    cfg = arch.full
+    dp = dp_axes(mesh)
+    n_dev = n_devices(mesh)
+    opt = make_optimizer(arch.optimizer)
+    p_sds = jax.eval_shape(lambda: rec_mod.dcn_init(jax.random.PRNGKey(0), cfg))
+    p_specs = jax.tree.map(lambda _: P(), p_sds)
+    p_specs["tables"] = P(None, "model", None)      # EP-analogue row shard
+
+    d_in = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = cfg.n_cross_layers * 2.0 * d_in * d_in
+    dims = [d_in] + list(cfg.mlp) + [1]
+    mlp = sum(2.0 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    per_row = cross + mlp
+
+    if shape.kind == "train":
+        b = shape.dims["batch"]
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(rec_mod.dcn_loss)(params, batch, cfg)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss
+        batch_sds = {"dense": SDS((b, cfg.n_dense), jnp.float32),
+                     "sparse_ids": SDS((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                     "labels": SDS((b,), jnp.int32)}
+        batch_spec = {"dense": P(dp, None), "sparse_ids": P(dp, None, None),
+                      "labels": P(dp)}
+        o_specs = _opt_state_specs(arch.optimizer, p_specs, p_sds)
+        o_sds = _opt_state_sds(opt, p_sds)
+        in_sh = (_named(mesh, p_specs), _named(mesh, o_specs), _named(mesh, batch_spec))
+        out_sh = (_named(mesh, p_specs), _named(mesh, o_specs), NamedSharding(mesh, P()))
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}", kind="train", fn=train_step,
+            args_sds=(p_sds, o_sds, batch_sds), in_shardings=in_sh,
+            out_shardings=out_sh, donate_argnums=(0, 1),
+            meta={"model_flops": 3.0 * b * per_row,
+                  "model_bytes_dev": (
+                      8.0 * _tree_bytes(p_sds) / mesh.shape["model"]  # opt RMW on tables
+                      + 3.0 * (b / n_dev) * (cfg.n_sparse * cfg.embed_dim + d_in) * 4),
+                  "rows": b})
+
+    if shape.kind == "serve":
+        b = shape.dims["batch"]
+        def serve(params, batch):
+            return rec_mod.dcn_forward(params, batch, cfg)
+        batch_sds = {"dense": SDS((b, cfg.n_dense), jnp.float32),
+                     "sparse_ids": SDS((b, cfg.n_sparse, cfg.multi_hot), jnp.int32)}
+        batch_spec = {"dense": P(dp, None), "sparse_ids": P(dp, None, None)}
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}", kind="serve", fn=serve,
+            args_sds=(p_sds, batch_sds),
+            in_shardings=(_named(mesh, p_specs), _named(mesh, batch_spec)),
+            out_shardings=NamedSharding(mesh, P(dp)),
+            meta={"model_flops": b * per_row,
+                  "model_bytes_dev": (_tree_bytes(p_sds) / mesh.shape["model"]
+                                      + (b / n_dev) * d_in * 4 * 2),
+                  "rows": b})
+
+    # retrieval: 1 query vs 1M candidates
+    b = shape.dims["batch"]
+    c = _round_up(shape.dims["n_candidates"], max(512, n_dev))
+    all_axes = tuple(mesh.axis_names)
+
+    def retrieval(params, batch):
+        return rec_mod.retrieval_score(params, batch, cfg)
+
+    batch_sds = {"dense": SDS((b, cfg.n_dense), jnp.float32),
+                 "sparse_ids": SDS((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                 "candidates": SDS((c, cfg.embed_dim), jnp.float32)}
+    batch_spec = {"dense": P(), "sparse_ids": P(None, None, None),
+                  "candidates": P(all_axes, None)}
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="retrieval", fn=retrieval,
+        args_sds=(p_sds, batch_sds),
+        in_shardings=(_named(mesh, p_specs), _named(mesh, batch_spec)),
+        out_shardings=NamedSharding(mesh, P(None, all_axes)),
+        meta={"model_flops": 2.0 * b * c * cfg.embed_dim + b * per_row,
+              "model_bytes_dev": (c / n_dev) * cfg.embed_dim * 4 * 2,
+              "rows": c})
+
+
+# ===========================================================================
+# entry point
+# ===========================================================================
+def build_step(arch_name: str, shape_name: str, mesh) -> StepBundle:
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return _lm_train(arch, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill(arch, shape, mesh)
+        return _lm_decode(arch, shape, mesh)
+    if arch.family == "gnn":
+        return _gnn_train(arch, shape, mesh)
+    return _recsys_step(arch, shape, mesh)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs import ARCH_IDS
+    cells = []
+    for a in ARCH_IDS:
+        arch = get_arch(a)
+        for s in arch.shapes:
+            cells.append((a, s.name))
+    return cells
+
+
+__all__ = ["StepBundle", "build_step", "all_cells", "make_optimizer"]

@@ -1,0 +1,19 @@
+# Model zoo (DESIGN.md §3): transformer family (GQA/MLA, dense/MoE),
+# GNNs (GCN, SchNet, EGNN, MACE), recsys (DCN-v2 + EmbeddingBag).
+from repro.models.gnn import (
+    EGNNConfig, GCNConfig, MACEConfig, SchNetConfig,
+    egnn_forward, egnn_init, egnn_loss,
+    gcn_forward, gcn_init, gcn_loss,
+    mace_forward, mace_init, mace_loss,
+    schnet_forward, schnet_init, schnet_loss,
+)
+from repro.models.layers import ShardCtx, cross_entropy, flash_attention
+from repro.models.moe import MoEConfig, init_moe_params, moe_dense, moe_ep
+from repro.models.moe_tp import moe_tp
+from repro.models.recsys import (
+    DCNConfig, dcn_forward, dcn_init, dcn_loss, embedding_bag, retrieval_score,
+)
+from repro.models.transformer import (
+    TransformerConfig, cache_specs, decode_step, forward, init_cache,
+    init_params, loss_fn, param_specs,
+)

@@ -1,0 +1,210 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/MLA attention, SwiGLU,
+flash (chunked online-softmax) attention, and cross-entropy.
+
+Everything is pure-functional (params are pytrees of jnp arrays) and
+mesh-agnostic: sharding enters only through (a) the `in_shardings` of the
+enclosing pjit and (b) optional `with_sharding_constraint` hints driven by a
+:class:`ShardCtx`. On a single CPU device the same code runs unsharded.
+
+dtype policy: params are stored in ``cfg.param_dtype``; matmuls run in
+``cfg.compute_dtype``; softmax/norm statistics and the loss are always f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# sharding helper
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding hints. ``mesh=None`` disables all constraints."""
+
+    mesh: Any = None
+    dp: tuple[str, ...] = ("data",)   # batch axes (("pod","data") multi-pod)
+    tp: str | None = "model"          # tensor axis
+    sp: bool = False                  # shard sequence dim over tp (long prefill)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def act3(self, x: jax.Array) -> jax.Array:
+        """[B, S, D] activation constraint."""
+        seq = self.tp if self.sp else None
+        return self.constrain(x, P(self.dp, seq, None))
+
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp is None:
+            return 1
+        return self.mesh.shape[self.tp]
+
+    def act4(self, x: jax.Array) -> jax.Array:
+        """[B, S, H, hd] attention tensor constraint: SP shards the seq dim
+        (heads whole), non-SP shards heads when divisible."""
+        if self.mesh is None:
+            return x
+        if self.sp:
+            return self.constrain(x, P(self.dp, self.tp, None, None))
+        heads_ok = x.shape[2] % self.tp_size() == 0
+        return self.constrain(
+            x, P(self.dp, None, self.tp if heads_ok else None, None))
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim/2] inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S] (int32)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                        # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv   # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wi: jax.Array, wo: jax.Array,
+           compute_dtype: Any) -> jax.Array:
+    """SwiGLU MLP: (silu(x@wg) * (x@wi)) @ wo."""
+    xc = x.astype(compute_dtype)
+    g = jax.nn.silu(jnp.dot(xc, wg.astype(compute_dtype)))
+    h = g * jnp.dot(xc, wi.astype(compute_dtype))
+    return jnp.dot(h, wo.astype(compute_dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (shared masked-softmax core)
+# ---------------------------------------------------------------------------
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool, q_offset: jax.Array | int = 0,
+            kv_len: jax.Array | None = None,
+            window: int | None = None) -> jax.Array:
+    """Plain attention. q:[B,Sq,H,hd] k,v:[B,Sk,KV,hd]; GQA by head repeat.
+
+    q_offset: absolute position of q[0] (decode: cache length).
+    kv_len: number of valid cache entries (decode with growing cache).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    v = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    sk = k.shape[1]
+    kpos = jnp.arange(sk)
+    qpos = jnp.arange(sq) + q_offset
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 1024,
+                    k_chunk: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention (never materializes [Sq, Sk]).
+
+    Used for the 32k/500k cells where [B,H,S,S] logits would not fit HBM.
+    The TPU deployment swaps in a fused Pallas splash kernel; the online-
+    softmax structure (and therefore memory behaviour) is identical.
+    """
+    b, sq, h, hd = q.shape
+    dv = v.shape[-1]           # may differ from hd (MLA: qk 192, v 128)
+    kv = k.shape[2]
+    rep = h // kv
+    sk = k.shape[1]
+    nq, nk = sq // q_chunk, sk // k_chunk
+    qr = q.reshape(b, nq, q_chunk, h, hd)
+
+    def per_qchunk(qi, q_blk):
+        # carry: (acc [b,qc,h,dv] f32, row_max [b,h,qc], row_sum [b,h,qc])
+        acc0 = jnp.zeros((b, q_chunk, h, dv), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * k_chunk, k_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * k_chunk, k_chunk, 1)
+            if rep > 1:
+                k_blk = jnp.repeat(k_blk, rep, axis=2)
+                v_blk = jnp.repeat(v_blk, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk).astype(jnp.float32)
+            s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = kj * k_chunk + jnp.arange(k_chunk)
+                s = jnp.where(kpos[None, :] <= qpos[:, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * scale.transpose(0, 2, 1)[..., None] + pv.astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False), (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    if nq == 1:
+        # single q block (the SP-training path: q stays sequence-sharded,
+        # only k/v chunks stream) — no reshape of the sharded seq dim.
+        return per_qchunk(0, q)
+    out = jax.lax.map(lambda args: per_qchunk(*args),
+                      (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy in f32, optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    return loss
+
+
+__all__ = [
+    "ShardCtx", "NO_SHARD", "rms_norm", "apply_rope", "rope_freqs", "swiglu",
+    "flash_attention", "cross_entropy",
+]

@@ -1,0 +1,667 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+One configurable implementation provides:
+  * GQA attention (Mistral-Nemo, Qwen-2.5, Phi-3, Grok-1) with optional QKV
+    bias (Qwen) and sliding window;
+  * MLA attention (DeepSeek-V3): low-rank latent KV — naive (materialized)
+    form for train/prefill, *absorbed* form for decode so the cache stays
+    latent ([B, S, kv_rank + rope_dim], the memory win that makes even the
+    500k-context cell fit);
+  * dense SwiGLU or MoE FFN (top-k + shared experts; EP all-to-all when
+    n_experts % |model| == 0, TP-within-expert otherwise — see models/moe.py);
+  * scan-over-layers with optional remat, microbatched grad accumulation;
+  * KV-cache decode (GQA: context-parallel cache; MLA: latent cache) and an
+    optional MTP head (DeepSeek-V3).
+
+Params are plain pytrees stacked over the layer axis; ``param_specs`` returns
+the matching PartitionSpec tree for pjit (TP over ``model``, optional
+FSDP over ``data``, EP for experts).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    ShardCtx, NO_SHARD, apply_rope, cross_entropy, flash_attention, rms_norm,
+    swiglu,
+)
+from repro.models.moe import MoEConfig, init_moe_params, moe_dense, moe_ep
+from repro.models.moe_tp import moe_tp
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None          # default d_model // n_heads
+    attn: str = "gqa"                    # "gqa" | "mla"
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    sliding_window: int | None = None    # decode-time window (long_500k)
+    # --- MLA (DeepSeek-V3) ---
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- MoE ---
+    moe: MoEConfig | None = None
+    n_dense_layers: int | None = None    # layers 0..n_dense use dense FFN
+    # --- numerics / training ---
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = False
+    microbatches: int = 1
+    mtp: bool = False                    # DeepSeek multi-token prediction
+    flash_q_chunk: int = 1024
+    flash_k_chunk: int = 1024
+    fsdp: bool = False                   # shard params over 'data' too
+    kv_cache_dtype: str | None = None    # "int8": quantized GQA decode cache
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_moe_layers(self) -> int:
+        if self.moe is None:
+            return 0
+        nd = self.n_dense_layers if self.n_dense_layers is not None else 0
+        return self.n_layers - nd
+
+    @property
+    def n_dense(self) -> int:
+        return self.n_layers - self.n_moe_layers
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND roofline accounting)."""
+        return sum(int(x.size) for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self))))
+
+    def n_active_params(self) -> int:
+        """Activated params per token (MoE: top_k + shared of routed)."""
+        total = self.n_params()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        per_expert = 3 * self.d_model * self.moe.d_ff
+        routed = self.n_moe_layers * e * per_expert
+        active_routed = self.n_moe_layers * k * per_expert
+        return total - routed + active_routed
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _norm_init(k, shape, dt):
+    del k
+    return jnp.ones(shape, dt)
+
+
+def _dense_init(k, shape, dt, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return jax.random.normal(k, shape, dt) * jnp.asarray(s, dt)
+
+
+def _attn_params(key, cfg: TransformerConfig, L: int) -> dict:
+    ks = jax.random.split(key, 8)
+    d, hd, dt = cfg.d_model, cfg.hd, cfg.param_dtype
+    if cfg.attn == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wq_a": _dense_init(ks[0], (L, d, cfg.q_lora_rank), dt),
+            "q_norm": _norm_init(ks[1], (L, cfg.q_lora_rank), dt),
+            "wq_b": _dense_init(ks[2], (L, cfg.q_lora_rank, cfg.n_heads * qk), dt),
+            "wkv_a": _dense_init(ks[3], (L, d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt),
+            "kv_norm": _norm_init(ks[4], (L, cfg.kv_lora_rank), dt),
+            "wkv_b": _dense_init(
+                ks[5], (L, cfg.kv_lora_rank,
+                        cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)), dt),
+            "wo": _dense_init(ks[6], (L, cfg.n_heads * cfg.v_head_dim, d), dt),
+        }
+        return p
+    p = {
+        "wq": _dense_init(ks[0], (L, d, cfg.n_heads * hd), dt),
+        "wk": _dense_init(ks[1], (L, d, cfg.n_kv_heads * hd), dt),
+        "wv": _dense_init(ks[2], (L, d, cfg.n_kv_heads * hd), dt),
+        "wo": _dense_init(ks[3], (L, cfg.n_heads * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((L, cfg.n_heads * hd), dt)
+        p["bk"] = jnp.zeros((L, cfg.n_kv_heads * hd), dt)
+        p["bv"] = jnp.zeros((L, cfg.n_kv_heads * hd), dt)
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    d, dt = cfg.d_model, cfg.param_dtype
+    params: dict = {
+        "embed": _dense_init(ks[0], (cfg.vocab, d), dt, scale=0.02),
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": _dense_init(ks[1], (d, cfg.vocab), dt),
+    }
+    nd, nm = cfg.n_dense, cfg.n_moe_layers
+    if nd:
+        params["dense_blocks"] = {
+            "ln1": jnp.ones((nd, d), dt),
+            "ln2": jnp.ones((nd, d), dt),
+            "attn": _attn_params(ks[2], cfg, nd),
+            "wg": _dense_init(ks[3], (nd, d, cfg.d_ff), dt),
+            "wi": _dense_init(ks[4], (nd, d, cfg.d_ff), dt),
+            "wo": _dense_init(ks[5], (nd, cfg.d_ff, d), dt),
+        }
+    if nm:
+        params["moe_blocks"] = {
+            "ln1": jnp.ones((nm, d), dt),
+            "ln2": jnp.ones((nm, d), dt),
+            "attn": _attn_params(ks[6], cfg, nm),
+            "moe": init_moe_params(ks[7], cfg.moe, nm, dt),
+        }
+    if cfg.mtp:
+        params["mtp"] = {
+            "ln": jnp.ones((d,), dt),
+            "proj": _dense_init(ks[8], (2 * d, d), dt),
+            "block": {
+                "ln1": jnp.ones((1, d), dt),
+                "ln2": jnp.ones((1, d), dt),
+                "attn": _attn_params(ks[9], cfg, 1),
+                "wg": _dense_init(ks[3], (1, d, cfg.d_ff), dt),
+                "wi": _dense_init(ks[4], (1, d, cfg.d_ff), dt),
+                "wo": _dense_init(ks[5], (1, cfg.d_ff, d), dt),
+            },
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# partition specs
+# ---------------------------------------------------------------------------
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def param_specs_zero3(cfg: TransformerConfig, mesh) -> dict:
+    """ZeRO-3 layout: every tensor sharded over the WHOLE flat mesh on its
+    largest divisible dim; no tensor parallelism. For small dense archs the
+    2D mesh's 16-way TP is pure collective overhead (EXPERIMENTS.md §Perf
+    hillclimb #2): pure-DP + fully-sharded state turns the per-layer
+    activation gathers into per-layer weight gathers (layer params are far
+    smaller than layer activations at global batch 256)."""
+    n_total = 1
+    for v in mesh.shape.values():
+        n_total *= v
+    axes = tuple(mesh.axis_names)
+
+    def leaf(sds):
+        shp = sds.shape
+        for i in sorted(range(len(shp)), key=lambda i: -shp[i]):
+            if shp[i] % n_total == 0:
+                parts = [None] * len(shp)
+                parts[i] = axes
+                return P(*parts)
+        return P()  # small/odd tensors replicated
+
+    probe = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return jax.tree.map(leaf, probe)
+
+
+def param_specs(cfg: TransformerConfig, mesh) -> dict:
+    """PartitionSpec tree matching ``init_params``. TP over 'model';
+    optional FSDP over 'data'; experts over 'model' when divisible."""
+    tp = mesh.shape["model"]
+    # FSDP over every non-model axis (('pod','data') on the 2-pod mesh) —
+    # param/grad/opt bytes scale down with total DP width, not per-pod.
+    fs = tuple(a for a in mesh.axis_names if a != "model") if cfg.fsdp else None
+    d = cfg.d_model
+
+    def attn_specs(ap: dict) -> dict:
+        out = {}
+        for name, arr_name in [(k, k) for k in ap]:
+            del arr_name
+            if name in ("wq", "wk", "wv"):
+                out[name] = P(None, fs, "model")
+            elif name in ("bq", "bk", "bv"):
+                out[name] = P(None, "model")
+            elif name == "wo":
+                out[name] = P(None, "model", fs)
+            elif name in ("wq_a", "wkv_a"):
+                out[name] = P(None, fs, None)
+            elif name in ("wq_b", "wkv_b"):
+                out[name] = P(None, None, "model")
+            else:  # norms
+                out[name] = P(None, None)
+        return out
+
+    def block_specs(bp: dict) -> dict:
+        out = {"ln1": P(None, None), "ln2": P(None, None),
+               "attn": attn_specs(bp["attn"])}
+        if "wg" in bp:
+            out["wg"] = P(None, fs, "model")
+            out["wi"] = P(None, fs, "model")
+            out["wo"] = P(None, "model", fs)
+        if "moe" in bp:
+            e = cfg.moe.n_experts
+            if _div(e, tp):   # EP
+                ms = {"router": P(None, None, None),
+                      "wg": P(None, "model", fs, None),
+                      "wi": P(None, "model", fs, None),
+                      "wo": P(None, "model", None, fs)}
+            else:             # TP-within-expert (shard d_ff)
+                ms = {"router": P(None, None, None),
+                      "wg": P(None, None, fs, "model"),
+                      "wi": P(None, None, fs, "model"),
+                      "wo": P(None, None, "model", fs)}
+            for s in ("shared_wg", "shared_wi", "shared_wo"):
+                if s in bp["moe"]:
+                    ms[s] = P(None, fs, "model") if s != "shared_wo" else P(None, "model", fs)
+            out["moe"] = ms
+        return out
+
+    specs: dict = {
+        "embed": P("model", None) if _div(cfg.vocab, tp) else P(None, None),
+        "final_norm": P(None),
+        "lm_head": P(fs, "model") if _div(cfg.vocab, tp) else P(fs, None),
+    }
+    del d
+    probe = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if "dense_blocks" in probe:
+        specs["dense_blocks"] = block_specs(probe["dense_blocks"])
+    if "moe_blocks" in probe:
+        specs["moe_blocks"] = block_specs(probe["moe_blocks"])
+    if "mtp" in probe:
+        specs["mtp"] = {"ln": P(None), "proj": P(None, None),
+                        "block": block_specs(probe["mtp"]["block"])}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# attention forward
+# ---------------------------------------------------------------------------
+def _gqa_attn(x: jax.Array, ap: dict, cfg: TransformerConfig,
+              ctx: ShardCtx, use_flash: bool,
+              collect_cache: bool = False):
+    b, s, d = x.shape
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    cd = cfg.compute_dtype
+    xc = x.astype(cd)
+    q = jnp.dot(xc, ap["wq"].astype(cd))
+    k = jnp.dot(xc, ap["wk"].astype(cd))
+    v = jnp.dot(xc, ap["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"].astype(cd), k + ap["bk"].astype(cd), v + ap["bv"].astype(cd)
+    q = ctx.act4(q.reshape(b, s, h, hd))
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    pos = jnp.arange(s)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if use_flash:
+        o = flash_attention(q, k, v, causal=True,
+                            q_chunk=min(cfg.flash_q_chunk, s),
+                            k_chunk=min(cfg.flash_k_chunk, s))
+    else:
+        from repro.models.layers import _attend
+        o = _attend(q, k, v, causal=True)
+    o = ctx.act4(o).reshape(b, s, h * hd)
+    out = jnp.dot(o.astype(cd), ap["wo"].astype(cd)).astype(x.dtype)
+    if collect_cache:
+        return out, {"k": k, "v": v}   # post-rope, matches decode semantics
+    return out, None
+
+
+def _mla_attn(x: jax.Array, ap: dict, cfg: TransformerConfig,
+              ctx: ShardCtx, use_flash: bool,
+              collect_cache: bool = False):
+    """Naive (materialized) MLA for train/prefill."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cd = cfg.compute_dtype
+    xc = x.astype(cd)
+    cq = rms_norm(jnp.dot(xc, ap["wq_a"].astype(cd)), ap["q_norm"])
+    q = jnp.dot(cq.astype(cd), ap["wq_b"].astype(cd)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = jnp.dot(xc, ap["wkv_a"].astype(cd))
+    c_kv = rms_norm(ckv[..., :cfg.kv_lora_rank], ap["kv_norm"])
+    k_rope = ckv[..., cfg.kv_lora_rank:].reshape(b, s, 1, dr)
+    pos = jnp.arange(s)[None, :]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
+    kvm = jnp.dot(c_kv.astype(cd), ap["wkv_b"].astype(cd)).reshape(b, s, h, dn + dv)
+    k_nope, v = kvm[..., :dn], kvm[..., dn:]
+    q_full = ctx.act4(jnp.concatenate([q_nope, q_rope], axis=-1))
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    if use_flash:
+        o = flash_attention(q_full, k_full, v, causal=True,
+                            q_chunk=min(cfg.flash_q_chunk, s),
+                            k_chunk=min(cfg.flash_k_chunk, s))
+    else:
+        from repro.models.layers import _attend
+        o = _attend(q_full, k_full, v, causal=True)
+    o = ctx.act4(o).reshape(b, s, h * dv)
+    out = jnp.dot(o.astype(cd), ap["wo"].astype(cd)).astype(x.dtype)
+    if collect_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0]}  # latent cache
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+            ctx: ShardCtx = NO_SHARD, mesh=None, return_cache: bool = False):
+    """tokens [B, S] -> (logits [B, S, V] f32, aux_loss scalar[, cache]).
+
+    ``return_cache=True`` (the prefill step) also returns the stacked KV
+    cache ([L, B, S, ...]; GQA: k/v, MLA: latent) ready for decode_step.
+    """
+    b, s = tokens.shape
+    use_flash = s >= 2048
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = ctx.act3(h)
+
+    def make_block(kind: str):
+        def block(carry, lp):
+            hh, aux = carry
+            att, cache = _attn_fn(rms_norm(hh, lp["ln1"]), lp["attn"], cfg,
+                                  ctx, use_flash, collect_cache=return_cache)
+            hh = hh + att
+            hh = ctx.act3(hh)
+            y = rms_norm(hh, lp["ln2"])
+            if kind == "dense":
+                hh = hh + swiglu(y, lp["wg"], lp["wi"], lp["wo"], cfg.compute_dtype)
+            else:
+                ff, a = _moe_fn(y, lp["moe"], cfg, mesh, ctx)
+                hh = hh + ff
+                aux = aux + a
+            hh = ctx.act3(hh)
+            return (hh, aux), cache
+        return block
+
+    _attn_fn = _mla_attn if cfg.attn == "mla" else _gqa_attn
+    aux = jnp.asarray(0.0, jnp.float32)
+    caches = []
+    if "dense_blocks" in params:
+        blk = make_block("dense")
+        if cfg.remat:
+            blk = jax.checkpoint(blk, prevent_cse=False)
+        (h, aux), c = jax.lax.scan(blk, (h, aux), params["dense_blocks"])
+        caches.append(c)
+    if "moe_blocks" in params:
+        blk = make_block("moe")
+        if cfg.remat:
+            blk = jax.checkpoint(blk, prevent_cse=False)
+        (h, aux), c = jax.lax.scan(blk, (h, aux), params["moe_blocks"])
+        caches.append(c)
+
+    h = rms_norm(h, params["final_norm"])
+    # LM head: gather the sequence, shard the vocab — keeps the lm_head/
+    # embed grads vocab-sharded (a full f32 [D, V] grad per device otherwise).
+    h = ctx.constrain(h, P(ctx.dp, None, None))
+    logits = jnp.dot(h.astype(cfg.compute_dtype),
+                     params["lm_head"].astype(cfg.compute_dtype))
+    logits = ctx.constrain(logits, P(ctx.dp, None, ctx.tp))
+    if return_cache:
+        cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *caches)
+        return logits.astype(jnp.float32), aux, cache
+    return logits.astype(jnp.float32), aux
+
+
+def _moe_fn(y, mp, cfg: TransformerConfig, mesh, ctx: ShardCtx):
+    e = cfg.moe.n_experts
+    tp_size = mesh.shape["model"] if mesh is not None else 1
+    if mesh is not None and not _div(e, tp_size):
+        return moe_tp(y, mp, cfg.moe, mesh=mesh, dp=ctx.dp, tp="model",
+                      sp=ctx.sp)
+    return moe_ep(y, mp, cfg.moe, mesh=mesh, dp=ctx.dp, tp="model",
+                  sp=ctx.sp)
+
+
+def loss_fn(params: dict, tokens: jax.Array, labels: jax.Array,
+            cfg: TransformerConfig, ctx: ShardCtx = NO_SHARD, mesh=None) -> jax.Array:
+    logits, aux = forward(params, tokens, cfg, ctx, mesh)
+    loss = cross_entropy(logits, labels)
+    if cfg.mtp:
+        loss = loss + 0.1 * _mtp_loss(params, logits, tokens, labels, cfg, ctx)
+    coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
+    return loss + coef * aux
+
+
+def _mtp_loss(params, logits, tokens, labels, cfg, ctx: ShardCtx) -> jax.Array:
+    """DeepSeek-V3 MTP (depth 1): predict token t+2 from the t-th hidden
+    state combined with the embedding of token t+1."""
+    del logits
+    mp = params["mtp"]
+    h = ctx.act3(jnp.take(params["embed"], tokens, axis=0))
+    nxt = jnp.take(params["embed"], jnp.roll(labels, -1, axis=1), axis=0)
+    z = jnp.concatenate([rms_norm(h, mp["ln"]), nxt.astype(h.dtype)], axis=-1)
+    z = jnp.dot(z.astype(cfg.compute_dtype), mp["proj"].astype(cfg.compute_dtype))
+    z = ctx.act3(z)
+    bp = jax.tree.map(lambda a: a[0], mp["block"])
+    z = z + _gqa_mtp(rms_norm(z, bp["ln1"]), bp, cfg)
+    z = z + swiglu(rms_norm(z, bp["ln2"]), bp["wg"], bp["wi"], bp["wo"], cfg.compute_dtype)
+    z = ctx.act3(z)
+    z = ctx.constrain(z, P(ctx.dp, None, None))
+    lg = jnp.dot(rms_norm(z, mp["ln"]).astype(cfg.compute_dtype),
+                 params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    lg = ctx.constrain(lg, P(ctx.dp, None, ctx.tp))
+    tgt = jnp.roll(labels, -2, axis=1)
+    return cross_entropy(lg[:, :-2], tgt[:, :-2])
+
+
+def _gqa_mtp(x, bp, cfg):
+    """MTP block attention; MLA configs reuse the MLA projection weights."""
+    c = replace(cfg, remat=False)
+    fn = _mla_attn if cfg.attn == "mla" else _gqa_attn
+    out, _ = fn(x, bp["attn"], c, NO_SHARD, use_flash=x.shape[1] >= 2048)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """KV cache pytree. GQA: K/V per layer; MLA: latent + rope cache.
+
+    ``kv_cache_dtype="int8"`` (GQA only): entries are stored int8 with one
+    f32 scale per (layer, batch, position, kv-head) — 2x less HBM traffic
+    per decoded token than bf16 (EXPERIMENTS.md §Perf hillclimb #3)."""
+    dt = dtype or cfg.param_dtype
+    L = cfg.n_layers
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.attn == "mla":
+        return {
+            "c_kv": jnp.zeros((L, batch, s, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((L, batch, s, cfg.qk_rope_dim), dt),
+        }
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.hd), jnp.int8),
+            "v": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, s, cfg.n_kv_heads), jnp.float32),
+            "v_scale": jnp.zeros((L, batch, s, cfg.n_kv_heads), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.hd), dt),
+    }
+
+
+def cache_specs(cfg: TransformerConfig, dp) -> dict:
+    """Context-parallel cache sharding: sequence over 'model'."""
+    if cfg.attn == "mla":
+        return {"c_kv": P(None, dp, "model", None),
+                "k_rope": P(None, dp, "model", None)}
+    return {"k": P(None, dp, "model", None, None),
+            "v": P(None, dp, "model", None, None)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cache_len: jax.Array, cfg: TransformerConfig,
+                ctx: ShardCtx = NO_SHARD, mesh=None) -> tuple[jax.Array, dict]:
+    """One decode step: tokens [B] -> (logits [B, V], updated cache).
+
+    ``cache_len`` — number of valid entries (= absolute position of the new
+    token). With a sliding window the cache is a ring buffer of size W.
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]   # [B,1,D]
+    window = cfg.sliding_window
+    slot = (cache_len % window) if window else cache_len
+
+    def block(carry, xs):
+        hh = carry
+        lp, layer_cache, li = xs
+        y = rms_norm(hh, lp["ln1"])
+        if cfg.attn == "mla":
+            o, new_c = _mla_decode(y, lp["attn"], layer_cache, cache_len, slot, cfg)
+        else:
+            o, new_c = _gqa_decode(y, lp["attn"], layer_cache, cache_len, slot, cfg)
+        hh = hh + o
+        y2 = rms_norm(hh, lp["ln2"])
+        if "moe" in lp:
+            ff, _ = _moe_fn(y2, lp["moe"], cfg, mesh, ctx)
+            hh = hh + ff
+        else:
+            hh = hh + swiglu(y2, lp["wg"], lp["wi"], lp["wo"], cfg.compute_dtype)
+        return hh, new_c
+
+    # interleave dense + moe blocks in layer order
+    h = x
+    new_cache_parts = []
+    offset = 0
+    for name in ("dense_blocks", "moe_blocks"):
+        if name not in params:
+            continue
+        bp = params[name]
+        L = jax.tree.leaves(bp)[0].shape[0]
+        sub_cache = jax.tree.map(lambda a: a[offset:offset + L], cache)
+        h, new_sub = jax.lax.scan(
+            block, h, (bp, sub_cache, jnp.arange(L)))
+        new_cache_parts.append(new_sub)
+        offset += L
+    new_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *new_cache_parts)
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.dot(h[:, 0].astype(cfg.compute_dtype),
+                     params["lm_head"].astype(cfg.compute_dtype))
+    return logits.astype(jnp.float32), new_cache
+
+
+def _gqa_decode(x, ap, layer_cache, cache_len, slot, cfg: TransformerConfig):
+    b = x.shape[0]
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    cd = cfg.compute_dtype
+    xc = x.astype(cd)
+    q = jnp.dot(xc, ap["wq"].astype(cd))
+    k = jnp.dot(xc, ap["wk"].astype(cd))
+    v = jnp.dot(xc, ap["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"].astype(cd), k + ap["bk"].astype(cd), v + ap["bv"].astype(cd)
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kv, hd)
+    v = v.reshape(b, 1, kv, hd)
+    pos = cache_len[None, None] if cache_len.ndim == 0 else cache_len[:, None]
+    q = apply_rope(q, jnp.broadcast_to(pos, (b, 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos, (b, 1)), cfg.rope_theta)
+
+    if cfg.kv_cache_dtype == "int8":
+        # per-(token, kv-head) symmetric quantization of the new entries
+        def quant(t):
+            amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+            scale = jnp.maximum(amax, 1e-8) / 127.0
+            q8 = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                          -127, 127).astype(jnp.int8)
+            return q8, scale
+        k8, ks = quant(k)
+        v8, vs = quant(v)
+        new_c = {
+            "k": jax.lax.dynamic_update_slice_in_dim(layer_cache["k"], k8, slot, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(layer_cache["v"], v8, slot, 1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k_scale"], ks, slot, 1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v_scale"], vs, slot, 1),
+        }
+        # fold scales in AFTER the int8 contraction-shaped read
+        ck = (new_c["k"].astype(cd) *
+              new_c["k_scale"].astype(cd)[..., None])
+        cv = (new_c["v"].astype(cd) *
+              new_c["v_scale"].astype(cd)[..., None])
+    else:
+        new_c = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k"], k.astype(layer_cache["k"].dtype), slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v"], v.astype(layer_cache["v"].dtype), slot, axis=1),
+        }
+        ck, cv = new_c["k"].astype(cd), new_c["v"].astype(cd)
+
+    s_cache = new_c["k"].shape[1]
+    valid = jnp.minimum(cache_len + 1, s_cache)
+    from repro.models.layers import _attend
+    o = _attend(q, ck, cv, causal=False, kv_len=valid)
+    o = o.reshape(b, 1, h * hd)
+    out = jnp.dot(o.astype(cd), ap["wo"].astype(cd)).astype(x.dtype)
+    return out, new_c
+
+
+def _mla_decode(x, ap, layer_cache, cache_len, slot, cfg: TransformerConfig):
+    """Absorbed MLA decode over the latent cache."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv, kvr = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    cd = cfg.compute_dtype
+    xc = x.astype(cd)
+    cq = rms_norm(jnp.dot(xc, ap["wq_a"].astype(cd)), ap["q_norm"])
+    q = jnp.dot(cq.astype(cd), ap["wq_b"].astype(cd)).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = jnp.broadcast_to(cache_len[None, None] if cache_len.ndim == 0
+                           else cache_len[:, None], (b, 1))
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    ckv = jnp.dot(xc, ap["wkv_a"].astype(cd))
+    c_new = rms_norm(ckv[..., :kvr], ap["kv_norm"])              # [B,1,kvr]
+    kr_new = apply_rope(ckv[..., None, kvr:], pos, cfg.rope_theta)[:, :, 0]
+
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        layer_cache["c_kv"], c_new.astype(layer_cache["c_kv"].dtype), slot, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        layer_cache["k_rope"], kr_new.astype(layer_cache["k_rope"].dtype), slot, axis=1)
+
+    wkv_b = ap["wkv_b"].astype(cd).reshape(kvr, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb: q_abs [B,h,kvr]
+    q_abs = jnp.einsum("bhd,khd->bhk", q_nope[:, 0].astype(cd), w_uk)
+    s_nope = jnp.einsum("bhk,bsk->bhs", q_abs, cc.astype(cd))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(cd), cr.astype(cd))
+    scores = (s_nope + s_rope).astype(jnp.float32) / jnp.sqrt(float(dn + dr))
+    s_cache = cc.shape[1]
+    valid = jnp.arange(s_cache)[None, None, :] < jnp.minimum(cache_len + 1, s_cache)
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsk->bhk", p.astype(cd), cc.astype(cd))
+    o = jnp.einsum("bhk,khv->bhv", ctx_lat, w_uv).reshape(b, 1, h * dv)
+    out = jnp.dot(o.astype(cd), ap["wo"].astype(cd)).astype(x.dtype)
+    return out, {"c_kv": cc, "k_rope": cr}
+
+
+__all__ = [
+    "TransformerConfig", "init_params", "param_specs", "param_specs_zero3",
+    "forward", "loss_fn",
+    "init_cache", "cache_specs", "decode_step",
+]

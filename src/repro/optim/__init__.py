@@ -1,0 +1,14 @@
+# Optimizers + schedules + gradient compression (DESIGN.md §3).
+from repro.optim.optimizers import adafactor, adamw, sgdm
+from repro.optim.schedule import constant, linear_warmup_cosine
+from repro.optim.compress import (
+    compressed_psum, dequantize_int8, quantize_int8,
+)
+from repro.optim.util import clip_by_global_norm, global_norm
+
+__all__ = [
+    "adamw", "adafactor", "sgdm",
+    "constant", "linear_warmup_cosine",
+    "quantize_int8", "dequantize_int8", "compressed_psum",
+    "clip_by_global_norm", "global_norm",
+]

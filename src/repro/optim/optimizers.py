@@ -1,0 +1,204 @@
+"""Functional optimizers: AdamW, Adafactor, SGD-momentum.
+
+API (optax-like but dependency-free):
+    opt = adamw(lr_schedule, ...)
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params)
+
+Adafactor keeps *factored* second moments for >=2-D weights (row + column
+accumulators instead of a full moment tensor) — the optimizer-state memory
+trick that lets the 314B/671B configs fit the pod (DESIGN.md §4). The
+factoring follows Shazeer & Stern 2018 (factor the trailing two dims).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.util import global_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def _map3(fn, params, grads, *states, sequential: bool = True):
+    """Map a multi-output fn over (params, grads, *states); returns tuple of
+    trees, one per fn output.
+
+    ``sequential`` threads an optimization_barrier token between leaf
+    updates so the scheduler cannot overlap the f32 temporaries of many
+    leaves: peak optimizer memory = ONE leaf's working set (measured -16GiB
+    on the DeepSeek-671B cell; EXPERIMENTS.md §Perf). The updates are
+    bandwidth-bound, so the serialization costs ~nothing.
+    """
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    s_flat = [treedef.flatten_up_to(s) for s in states]
+    outs = []
+    token = jnp.zeros((), jnp.float32)
+    for p, g, *ss in zip(p_leaves, g_leaves, *s_flat):
+        if sequential:
+            g, token = jax.lax.optimization_barrier((g, token))
+        out = fn(p, g, *ss)
+        if sequential:
+            first = jax.tree.leaves(out)[0]
+            token = jax.lax.optimization_barrier(
+                jax.lax.reshape(first, (first.size,))[0].astype(jnp.float32))
+        outs.append(out)
+    n_out = len(outs[0])
+    return tuple(treedef.unflatten([o[i] for o in outs]) for i in range(n_out))
+
+
+SCAN_LAYER_UPDATES = False  # opt-in: layer-scanned optimizer updates.
+# Shrinks f32 temporaries to one-layer slices on TPU, but the XLA *CPU*
+# backend copies scan xs into the loop state (measured +3.6 GiB on the
+# DeepSeek cell) — so the dry-run keeps it off. EXPERIMENTS.md §Perf.
+
+
+def _maybe_scanned(upd_slice, p, g, *state):
+    """Apply a per-leaf update, optionally scanning over the layer axis for
+    big layer-stacked leaves so the f32 upcast/denominator temporaries are
+    one-layer-sized instead of whole-stack-sized."""
+    if SCAN_LAYER_UPDATES and p.ndim >= 3 and p.shape[0] >= 8 and p.size >= (1 << 24):
+        def body(_, pgs):
+            out = upd_slice(*pgs)
+            return None, out
+        _, stacked = jax.lax.scan(body, None, (p, g) + state)
+        return stacked
+    return upd_slice(p, g, *state)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        # clip folded into the per-leaf update: a whole-tree scaled copy of
+        # the grads would cost +4 bytes/param/device (DESIGN.md §4)
+        if grad_clip is not None:
+            gn = global_norm(grads)
+            clip_scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        else:
+            clip_scale = jnp.asarray(1.0, jnp.float32)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_slice(p, g, mu, nu):
+            g = g.astype(jnp.float32) * clip_scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / c1
+            nhat = nu / c2
+            step_t = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return _cast_like(p.astype(jnp.float32) - lr_t * step_t, p), mu, nu
+
+        def upd(p, g, mu, nu):
+            return _maybe_scanned(upd_slice, p, g, mu, nu)
+
+        new_p, new_mu, new_nu = _map3(upd, params, grads, state["mu"], state["nu"])
+        return new_p, {"step": step, "mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float, decay: float = 0.99, eps: float = 1e-30,
+              weight_decay: float = 0.0, grad_clip: float | None = 1.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    """Factored second moments for tensors whose trailing two dims are both
+    >= ``min_dim_factored``; small tensors fall back to full moments."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def _factored(p):
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),                 # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params):
+        if grad_clip is not None:
+            gn = global_norm(grads)
+            clip_scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        else:
+            clip_scale = jnp.asarray(1.0, jnp.float32)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+
+        def upd_slice(p, g, v):
+            g = g.astype(jnp.float32) * clip_scale
+            g2 = g * g + eps
+            if "vr" in v:
+                vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = decay * v["v"] + (1 - decay) * g2
+                denom = jnp.sqrt(vv)
+                new_v = {"v": vv}
+            upd_t = g / jnp.maximum(denom, eps) + weight_decay * p.astype(jnp.float32)
+            return _cast_like(p.astype(jnp.float32) - lr_t * upd_t, p), new_v
+
+        def upd(p, g, v):
+            return _maybe_scanned(upd_slice, p, g, v)
+
+        new_p, new_v = _map3(upd, params, grads, state["v"])
+        return new_p, {"step": step, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: Callable | float, momentum: float = 0.9,
+         grad_clip: float | None = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        if grad_clip is not None:
+            gn = global_norm(grads)
+            cs = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        else:
+            cs = jnp.asarray(1.0, jnp.float32)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32) * cs, state["m"], grads)
+        new_p = jax.tree.map(
+            lambda p, m: _cast_like(p.astype(jnp.float32) - lr_t * m, p), params, new_m)
+        return new_p, {"step": step, "m": new_m}
+
+    return Optimizer(init, update)
+
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgdm"]

@@ -1,0 +1,3 @@
+from repro.utils.timing import Timer, time_fn
+
+__all__ = ["Timer", "time_fn"]

@@ -1,0 +1,51 @@
+"""Wall-clock timing helpers for benches (block_until_ready-aware)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+
+@dataclass
+class Timer:
+    """Accumulating wall-clock timer."""
+
+    elapsed: float = 0.0
+    _start: float = field(default=0.0, repr=False)
+
+    def __enter__(self) -> "Timer":
+        self._start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.elapsed += time.perf_counter() - self._start
+
+
+def _block(x: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def time_fn(
+    fn: Callable[..., Any],
+    *args: Any,
+    iters: int = 5,
+    warmup: int = 1,
+    **kwargs: Any,
+) -> tuple[float, Any]:
+    """Time ``fn(*args, **kwargs)``; returns (seconds_per_call, last_result).
+
+    Blocks on all jax array outputs so async dispatch doesn't hide work.
+    """
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        _block(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kwargs)
+        _block(out)
+    return (time.perf_counter() - t0) / iters, out

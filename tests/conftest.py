@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real single CPU
+device; multi-device tests spawn subprocesses (tests/multidev/)."""
+import numpy as np
+import pytest
+
+from repro.graphs.generators import erdos_renyi, planted_dense, small_named
+
+
+@pytest.fixture(scope="session")
+def er_graph():
+    return erdos_renyi(400, 0.03, seed=7)
+
+
+@pytest.fixture(scope="session")
+def planted():
+    g, mask, rho = planted_dense(1200, 45, seed=11)
+    return g, mask, rho
+
+
+@pytest.fixture(params=["triangle_plus_path", "k4_plus_star", "two_cliques",
+                        "petersen"])
+def named_graph(request):
+    return small_named(request.param)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture's
+REDUCED config runs one forward/train step on CPU — output shapes + no NaNs.
+The FULL configs are exercised only by the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.data import GraphBatcher, gnn_batch, lm_token_batches, recsys_batches
+from repro.graphs.generators import erdos_renyi
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models.transformer import (
+    TransformerConfig, decode_step, forward, init_cache, init_params, loss_fn,
+)
+from repro.optim import adamw
+
+
+def test_registry_covers_assignment():
+    assert len(ARCH_IDS) == 10
+    cells = sum(len(get_arch(a).shapes) for a in ARCH_IDS)
+    assert cells == 40  # 5 LM x 4 + 4 GNN x 4 + 1 recsys x 4
+
+
+LM_ARCHS = [a for a in ARCH_IDS if get_arch(a).family == "lm"]
+GNN_ARCHS = [a for a in ARCH_IDS if get_arch(a).family == "gnn"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_train_step(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    batch = next(lm_token_batches(cfg.vocab, 2, 16, seed=0))
+    toks = jnp.asarray(batch["tokens"])
+    labs = jnp.asarray(batch["labels"])
+    logits, aux = forward(p, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, grads = jax.value_and_grad(lambda q: loss_fn(q, toks, labs, cfg))(p)
+    assert np.isfinite(float(loss))
+    opt = adamw(1e-3)
+    st = opt.init(p)
+    p2, _ = opt.update(grads, st, p)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(p2))
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_decode_step(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, 2, 8)
+    toks = jnp.asarray([3, 5])
+    lg, cache2 = decode_step(p, cache, toks, jnp.asarray(0), cfg)
+    assert lg.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch_id", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke
+    g = erdos_renyi(50, 0.1, seed=2)
+    geometric = not isinstance(cfg, gnn_mod.GCNConfig)
+    b = gnn_batch(g, d_feat=getattr(cfg, "d_feat", None) if not geometric else None,
+                  n_classes=getattr(cfg, "n_classes", 4),
+                  geometric=geometric, seed=0)
+    jb = {k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v)
+          for k, v in b.items()}
+    init_fn = {gnn_mod.GCNConfig: gnn_mod.gcn_init,
+               gnn_mod.SchNetConfig: gnn_mod.schnet_init,
+               gnn_mod.EGNNConfig: gnn_mod.egnn_init,
+               gnn_mod.MACEConfig: gnn_mod.mace_init}[type(cfg)]
+    loss_fn_ = {gnn_mod.GCNConfig: gnn_mod.gcn_loss,
+                gnn_mod.SchNetConfig: gnn_mod.schnet_loss,
+                gnn_mod.EGNNConfig: gnn_mod.egnn_loss,
+                gnn_mod.MACEConfig: gnn_mod.mace_loss}[type(cfg)]
+    p = init_fn(jax.random.PRNGKey(0), cfg)
+    loss, grads = jax.value_and_grad(loss_fn_)(p, jb, cfg)
+    assert np.isfinite(float(loss))
+    opt = adamw(1e-3)
+    p2, _ = opt.update(grads, opt.init(p), p)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(p2))
+
+
+def test_recsys_smoke_train_step():
+    arch = get_arch("dcn-v2")
+    cfg = arch.smoke
+    p = rec_mod.dcn_init(jax.random.PRNGKey(0), cfg)
+    b = next(recsys_batches(cfg, batch=8, seed=0))
+    jb = {k: jnp.asarray(v) for k, v in b.items() if k != "step"}
+    logits = rec_mod.dcn_forward(p, jb, cfg)
+    assert logits.shape == (8,)
+    loss, grads = jax.value_and_grad(rec_mod.dcn_loss)(p, jb, cfg)
+    assert np.isfinite(float(loss))
+    opt = adamw(1e-3)
+    p2, _ = opt.update(grads, opt.init(p), p)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(p2))
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published numbers."""
+    nemo = get_arch("mistral-nemo-12b").full
+    assert (nemo.n_layers, nemo.d_model, nemo.n_heads, nemo.n_kv_heads,
+            nemo.d_ff, nemo.vocab, nemo.hd) == (40, 5120, 32, 8, 14336, 131072, 128)
+    qwen = get_arch("qwen2.5-3b").full
+    assert (qwen.n_layers, qwen.d_model, qwen.n_heads, qwen.n_kv_heads,
+            qwen.d_ff, qwen.vocab, qwen.qkv_bias) == (36, 2048, 16, 2, 11008, 151936, True)
+    phi = get_arch("phi3-mini-3.8b").full
+    assert (phi.n_layers, phi.d_model, phi.n_heads, phi.n_kv_heads,
+            phi.d_ff, phi.vocab) == (32, 3072, 32, 32, 8192, 32064)
+    grok = get_arch("grok-1-314b").full
+    assert (grok.n_layers, grok.d_model, grok.n_heads, grok.n_kv_heads,
+            grok.d_ff, grok.vocab) == (64, 6144, 48, 8, 32768, 131072)
+    assert (grok.moe.n_experts, grok.moe.top_k) == (8, 2)
+    ds = get_arch("deepseek-v3-671b").full
+    assert (ds.n_layers, ds.d_model, ds.n_heads, ds.vocab) == (61, 7168, 128, 129280)
+    assert (ds.moe.n_experts, ds.moe.top_k, ds.moe.n_shared, ds.moe.d_ff) == (256, 8, 1, 2048)
+    assert ds.attn == "mla" and ds.mtp
+    # param counts in the right ballpark (names say 314B / 671B)
+    assert 250e9 < grok.n_params() < 380e9
+    assert 600e9 < ds.n_params() < 750e9
+
+    mace = get_arch("mace").full
+    assert (mace.n_layers, mace.d_hidden, mace.l_max, mace.correlation,
+            mace.n_rbf) == (2, 128, 2, 3, 8)
+    gcn = get_arch("gcn-cora").full
+    assert (gcn.n_layers, gcn.d_hidden) == (2, 16)
+    dcn = get_arch("dcn-v2").full
+    assert (dcn.n_dense, dcn.n_sparse, dcn.embed_dim, dcn.n_cross_layers,
+            tuple(dcn.mlp)) == (13, 26, 16, 3, (1024, 1024, 512))
+
+
+def test_all_cells_enumerates_40():
+    from repro.launch.steps import all_cells
+    assert len(all_cells()) == 40

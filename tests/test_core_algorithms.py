@@ -1,0 +1,147 @@
+"""P-Bahmani, k-core, CBDS-P, Charikar: correctness + the paper's claims.
+
+Falsifiable claims validated (paper §3, §4):
+  * P-Bahmani: rho~ >= rho* / (2+2eps)   [Bahmani et al. thm]
+  * passes = O(log_{1+eps} n)
+  * densest-core density is a 2-approximation (Tatti 2019)
+  * CBDS-P >= densest-core density (>= phase-1), i.e. beats the plain
+    2-approximation whenever any legit vertex exists (paper Table 3)
+  * coreness values match networkx.core_number
+"""
+import math
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cbds_np, cbds_p, charikar, exact_densest, kcore_decompose, kcore_np,
+    pbahmani, pbahmani_np,
+)
+from repro.graphs.generators import erdos_renyi, planted_dense
+from repro.graphs.graph import Graph
+
+
+def random_graph(seed: int, n: int, p: float) -> Graph:
+    return erdos_renyi(n, p, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# jax == numpy oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("eps", [0.0, 0.05, 0.5])
+def test_pbahmani_jax_matches_np(er_graph, eps):
+    rho_j, mask_j, passes_j = pbahmani(er_graph, eps=eps)
+    rho_n, mask_n, passes_n = pbahmani_np(er_graph, eps=eps)
+    assert passes_j == passes_n
+    assert rho_j == pytest.approx(rho_n, rel=1e-6)
+    assert np.array_equal(mask_j, mask_n)
+
+
+def test_kcore_jax_matches_np(er_graph):
+    cj, dj, kj, vj, ej = kcore_decompose(er_graph)
+    cn, dn, kn, vn, en = kcore_np(er_graph)
+    assert np.array_equal(cj, cn)
+    assert (dj, kj, vj, ej) == (pytest.approx(dn), kn, vn, en)
+
+
+def test_cbds_jax_matches_np(er_graph):
+    rj = cbds_p(er_graph)
+    rn = cbds_np(er_graph)
+    assert rj["density"] == pytest.approx(rn["density"], rel=1e-5)
+    assert rj["k_star"] == rn["k_star"]
+    assert np.array_equal(rj["member_mask"], rn["member_mask"])
+
+
+# ---------------------------------------------------------------------------
+# coreness vs networkx
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_coreness_matches_networkx(seed):
+    g = random_graph(seed, 120, 0.06)
+    coreness, *_ = kcore_decompose(g)
+    core_nx = nx.core_number(g.to_networkx())
+    for v, c in core_nx.items():
+        assert coreness[v] == c, f"vertex {v}: {coreness[v]} != {c}"
+
+
+# ---------------------------------------------------------------------------
+# the paper's approximation claims
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.05, 0.5]))
+def test_pbahmani_approximation_bound(seed, eps):
+    g = random_graph(seed, 90, 0.08)
+    if g.n_edges == 0:
+        return
+    rho_star, _ = exact_densest(g)
+    rho, _, passes = pbahmani(g, eps=eps)
+    assert rho >= rho_star / (2 + 2 * eps) - 1e-5
+    # O(log_{1+eps} n) passes (loose constant)
+    if eps > 0:
+        bound = 4 + 4 * math.log(max(g.n_nodes, 2)) / math.log(1 + eps)
+        assert passes <= bound
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cbds_beats_2approx_bound(seed):
+    g = random_graph(seed, 90, 0.08)
+    if g.n_edges == 0:
+        return
+    rho_star, _ = exact_densest(g)
+    res = cbds_p(g)
+    # phase-1 densest core is a 2-approx; CBDS-P only improves on it
+    assert res["core_density"] >= rho_star / 2 - 1e-5
+    assert res["density"] >= res["core_density"] - 1e-5
+    assert res["density"] <= rho_star + 1e-4  # a valid subgraph density
+    # reported density matches the density of the returned member set
+    assert g.subgraph_density(res["member_mask"]) == pytest.approx(
+        res["density"], abs=2e-4)
+
+
+def test_charikar_2approx(er_graph):
+    rho_star, _ = exact_densest(er_graph)
+    rho, mask = charikar(er_graph)
+    assert rho >= rho_star / 2 - 1e-6
+    assert er_graph.subgraph_density(mask) == pytest.approx(rho, abs=1e-9)
+
+
+def test_pbahmani_eps0_matches_charikar_class(er_graph):
+    """eps=0 P-Bahmani is in the same accuracy class as Charikar (2-approx);
+    on most graphs the densities agree (paper Table 3 observation)."""
+    rho_star, _ = exact_densest(er_graph)
+    rho_pb, _, _ = pbahmani(er_graph, eps=0.0)
+    rho_ch, _ = charikar(er_graph)
+    assert rho_pb >= rho_star / 2 - 1e-6
+    assert rho_ch >= rho_star / 2 - 1e-6
+
+
+def test_planted_recovery(planted):
+    g, mask_true, rho_planted = planted
+    res = cbds_p(g)
+    rho_pb, mask_pb, _ = pbahmani(g, eps=0.05)
+    # both methods find (at least) the planted block's density
+    assert res["density"] >= rho_planted * 0.98
+    assert rho_pb >= rho_planted / (2 + 2 * 0.05) - 1e-5
+    # CBDS member set overlaps the planted block heavily
+    inter = (res["member_mask"] & mask_true).sum()
+    assert inter >= 0.9 * mask_true.sum()
+
+
+def test_cbds_multi_round_monotone(er_graph):
+    d1 = cbds_p(er_graph, rounds=1)["density"]
+    d3 = cbds_p(er_graph, rounds=3)["density"]
+    assert d3 >= d1 - 1e-6
+
+
+def test_paper_table3_shape(named_graph):
+    """Exact == P-Bahmani(0) == CBDS-P on the small named graphs
+    (the pattern of paper Table 3's first rows)."""
+    rho_star, _ = exact_densest(named_graph)
+    rho_pb, _, _ = pbahmani(named_graph, eps=0.0)
+    res = cbds_p(named_graph)
+    assert rho_pb == pytest.approx(rho_star, abs=1e-5)
+    assert res["density"] == pytest.approx(rho_star, abs=1e-5)

@@ -1,0 +1,128 @@
+"""Graph container, generators, IO, partitioner, sampler."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kcore_np
+from repro.graphs.generators import (
+    barabasi_albert, erdos_renyi, planted_dense, rmat, small_named,
+)
+from repro.graphs.graph import Graph
+from repro.graphs.io import load_snap_edgelist, save_edgelist
+from repro.graphs.partition import contiguous_bounds, partition_by_dst_block
+from repro.graphs.sampler import NeighborSampler
+
+
+def test_from_edges_dedup_selfloop_symmetry():
+    edges = np.array([[0, 1], [1, 0], [2, 2], [1, 2], [1, 2]])
+    g = Graph.from_edges(edges)
+    assert g.n_edges == 2                       # {0,1}, {1,2}
+    assert g.n_directed == 4
+    s, d = g.src[:4], g.dst[:4]
+    pairs = set(zip(s.tolist(), d.tolist()))
+    assert (0, 1) in pairs and (1, 0) in pairs  # symmetric storage
+    assert (2, 2) not in pairs                  # self-loop dropped
+    # padding sentinel
+    assert (g.src[g.n_directed:] == g.n_nodes).all()
+
+
+def test_degrees_and_density(er_graph):
+    g = er_graph
+    deg = g.degrees()
+    assert deg.sum() == 2 * g.n_edges
+    assert g.density() == pytest.approx(g.n_edges / g.n_nodes)
+
+
+def test_csr_roundtrip(er_graph):
+    g = er_graph
+    indptr, indices = g.to_csr()
+    assert indptr[-1] == g.n_directed
+    # neighbor sets match
+    nbrs_csr = set(indices[indptr[5]:indptr[6]].tolist())
+    s, d = g.src[:g.n_directed], g.dst[:g.n_directed]
+    nbrs_coo = set(d[s == 5].tolist())
+    assert nbrs_csr == nbrs_coo
+
+
+def test_dst_sorted_view(er_graph):
+    g = er_graph
+    src_s, dst_s = g.dst_sorted()
+    assert (np.diff(dst_s) >= 0).all()
+    assert sorted(zip(src_s.tolist(), dst_s.tolist())) == \
+        sorted(zip(g.src.tolist(), g.dst.tolist()))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_induced_subgraph_density(seed):
+    g = erdos_renyi(80, 0.1, seed=seed)
+    rng = np.random.default_rng(seed)
+    mask = rng.random(80) < 0.5
+    sub = g.induced_subgraph(mask)
+    assert sub.n_edges == round(g.subgraph_density(mask) * mask.sum())
+
+
+def test_generators_basic():
+    g = barabasi_albert(200, 3, seed=1)
+    assert g.n_nodes == 200 and g.n_edges >= 3 * 190
+    g2 = rmat(8, edge_factor=4, seed=2)
+    assert g2.n_nodes <= 256 and g2.n_edges > 0
+    g3, mask, rho = planted_dense(300, 25, seed=3)
+    assert rho > 5.0
+
+
+def test_snap_io(tmp_path, er_graph):
+    p = str(tmp_path / "g.txt")
+    save_edgelist(er_graph, p)
+    g2 = load_snap_edgelist(p)
+    assert g2.n_edges == er_graph.n_edges
+
+
+def test_partition_bounds():
+    b = contiguous_bounds(1000, 7)
+    assert b[0] == 0 and b[-1] == 1000
+    assert (np.diff(b) >= 142).all() and (np.diff(b) <= 143).all()
+
+
+def test_partition_by_dst_block(er_graph):
+    src, dst, pov = partition_by_dst_block(er_graph, 8)
+    assert (np.diff(dst) >= 0).all()
+    assert pov.max() == 7
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+def test_sampler_shapes_and_validity(er_graph):
+    s = NeighborSampler(er_graph, (4, 3), seed=0)
+    blk = s.sample(np.arange(8))
+    n_blk, n_e = s.block_shape(8)
+    assert blk["node_ids"].shape[0] == n_blk
+    assert blk["src"].shape[0] == n_e
+    # every real edge child is an actual graph neighbor of its parent
+    indptr, indices = er_graph.to_csr()
+    ids = blk["node_ids"]
+    for e in range(n_e):
+        cs, cd = blk["src"][e], blk["dst"][e]
+        if cs >= n_blk:
+            continue
+        child, parent = ids[cs], ids[cd]
+        if child < 0 or parent < 0:
+            continue
+        assert child in set(indices[indptr[parent]:indptr[parent + 1]].tolist())
+
+
+def test_core_ordered_sampler_prefers_dense(er_graph):
+    coreness, *_ = kcore_np(er_graph)
+    s_core = NeighborSampler(er_graph, (3,), coreness=coreness, seed=0)
+    s_unif = NeighborSampler(er_graph, (3,), seed=0)
+    seeds = np.arange(32)
+    mean_core, mean_unif = [], []
+    for s, out in ((s_core, mean_core), (s_unif, mean_unif)):
+        blk = s.sample(seeds)
+        ids = blk["node_ids"][len(seeds):]
+        ids = ids[ids >= 0]
+        out.append(coreness[ids].mean())
+    assert mean_core[0] >= mean_unif[0]  # biased toward the dense core

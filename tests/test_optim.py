@@ -1,0 +1,94 @@
+"""Optimizers, schedules, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adafactor, adamw, clip_by_global_norm, constant, dequantize_int8,
+    global_norm, linear_warmup_cosine, quantize_int8, sgdm,
+)
+
+
+def test_adamw_matches_manual_scalar():
+    """One AdamW step on a scalar vs hand-computed values."""
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.5])}
+    opt = adamw(lr=0.1, b1=0.9, b2=0.99, eps=0.0, weight_decay=0.0,
+                grad_clip=None)
+    st = opt.init(p)
+    p2, st2 = opt.update(g, st, p)
+    mu = 0.1 * 0.5
+    nu = 0.01 * 0.25
+    mhat = mu / (1 - 0.9)
+    nhat = nu / (1 - 0.99)
+    expected = 2.0 - 0.1 * mhat / np.sqrt(nhat)
+    np.testing.assert_allclose(float(p2["w"][0]), expected, rtol=1e-6)
+
+
+def test_grad_clip_effective():
+    p = {"w": jnp.ones(4)}
+    g = {"w": jnp.full(4, 100.0)}   # norm 200 >> 1
+    opt = sgdm(lr=1.0, momentum=0.0, grad_clip=1.0)
+    p2, _ = opt.update(g, opt.init(p), p)
+    # clipped grad has norm 1 -> per-element 0.5
+    np.testing.assert_allclose(np.asarray(p["w"] - p2["w"]), 0.5 * np.ones(4),
+                               rtol=1e-5)
+
+
+def test_adafactor_factored_state_memory():
+    p = {"big": jnp.ones((512, 1024)), "small": jnp.ones((4, 8))}
+    st = adafactor(1e-3).init(p)
+    assert set(st["v"]["big"]) == {"vr", "vc"}
+    assert st["v"]["big"]["vr"].shape == (512,)
+    assert st["v"]["big"]["vc"].shape == (1024,)
+    assert set(st["v"]["small"]) == {"v"}     # too small to factor
+    # factored state is ~1000x smaller than a full second moment
+    full = p["big"].size
+    fact = st["v"]["big"]["vr"].size + st["v"]["big"]["vc"].size
+    assert fact < full / 300
+
+
+def test_adafactor_converges_quadratic():
+    p = {"w": jnp.asarray(5.0)}
+    opt = adafactor(0.5, grad_clip=None)
+    st = opt.init(p)
+    for _ in range(100):
+        g = {"w": 2 * p["w"]}
+        p, st = opt.update(g, st, p)
+    assert abs(float(p["w"])) < 0.3
+
+
+def test_schedules():
+    f = linear_warmup_cosine(1.0, warmup_steps=10, total_steps=100,
+                             final_frac=0.1)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-5)
+    assert float(f(5)) == pytest.approx(0.5, abs=1e-5)
+    assert float(constant(0.3)(77)) == pytest.approx(0.3)
+
+
+def test_global_norm_and_clip():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(tree)) == pytest.approx(5.0)
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(gn) == pytest.approx(5.0)
+
+
+def test_int8_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256)) * 10
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    per_row_max = np.abs(np.asarray(x)).max(axis=1)
+    assert (err.max(axis=1) <= per_row_max / 127 + 1e-6).all()
+
+
+def test_bf16_param_training_stays_bf16():
+    p = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    g = {"w": jnp.full((8, 8), 0.1, jnp.bfloat16)}
+    opt = adamw(1e-2)
+    p2, _ = opt.update(g, opt.init(p), p)
+    assert p2["w"].dtype == jnp.bfloat16

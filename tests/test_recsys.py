@@ -1,0 +1,112 @@
+"""DCN-v2 + EmbeddingBag + retrieval."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import recsys_batches
+from repro.models.recsys import (
+    DCNConfig, dcn_forward, dcn_init, dcn_loss, embedding_bag, retrieval_score,
+)
+from repro.optim import adamw
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return DCNConfig(table_rows=500, embed_dim=8, n_cross_layers=2,
+                     mlp=(32, 16))
+
+
+def test_embedding_bag_one_hot(cfg):
+    p = dcn_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 500, (6, cfg.n_sparse, 1)).astype(np.int32))
+    out = embedding_bag(p["tables"], ids, cfg)
+    assert out.shape == (6, cfg.n_sparse * cfg.embed_dim)
+    # manual check for row 0, table 3
+    t, i = 3, int(ids[0, 3, 0])
+    exp = p["tables"][t, i]
+    got = out[0, t * cfg.embed_dim:(t + 1) * cfg.embed_dim]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-6)
+
+
+def test_embedding_bag_multi_hot_sums(cfg):
+    from dataclasses import replace
+    cfg4 = replace(cfg, multi_hot=4)
+    p = dcn_init(jax.random.PRNGKey(0), cfg4)
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, 500, (5, cfg.n_sparse, 4)).astype(np.int32)
+    out = embedding_bag(p["tables"], jnp.asarray(ids), cfg4)
+    # manual: bag sums the 4 rows
+    t = 7
+    exp = np.asarray(p["tables"])[t, ids[2, t]].sum(axis=0)
+    got = np.asarray(out)[2, t * cfg.embed_dim:(t + 1) * cfg.embed_dim]
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-5)
+
+
+def test_dcn_forward_and_loss(cfg):
+    p = dcn_init(jax.random.PRNGKey(0), cfg)
+    batch = next(recsys_batches(cfg, batch=16, seed=0))
+    jb = {k: jnp.asarray(v) for k, v in batch.items() if k != "step"}
+    logits = dcn_forward(p, jb, cfg)
+    assert logits.shape == (16,)
+    loss = dcn_loss(p, jb, cfg)
+    assert np.isfinite(float(loss))
+    g = jax.grad(dcn_loss)(p, jb, cfg)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_dcn_learns(cfg):
+    p = dcn_init(jax.random.PRNGKey(2), cfg)
+    opt = adamw(1e-2, weight_decay=0.0)
+    s = opt.init(p)
+    stream = recsys_batches(cfg, batch=256, seed=3)
+
+    @jax.jit
+    def step(p, s, batch):
+        l, g = jax.value_and_grad(dcn_loss)(p, batch, cfg)
+        p2, s2 = opt.update(g, s, p)
+        return p2, s2, l
+
+    losses = []
+    for _ in range(25):
+        b = next(stream)
+        jb = {k: jnp.asarray(v) for k, v in b.items() if k != "step"}
+        p, s, l = step(p, s, jb)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.9, (losses[0], losses[-1])
+
+
+def test_retrieval_is_one_matmul(cfg):
+    p = dcn_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "dense": jnp.asarray(rng.normal(size=(3, cfg.n_dense)).astype(np.float32)),
+        "sparse_ids": jnp.asarray(
+            rng.integers(0, 500, (3, cfg.n_sparse, 1)).astype(np.int32)),
+        "candidates": jnp.asarray(
+            rng.normal(size=(1000, cfg.embed_dim)).astype(np.float32)),
+    }
+    scores = retrieval_score(p, batch, cfg)
+    assert scores.shape == (3, 1000)
+    assert bool(jnp.all(jnp.isfinite(scores)))
+
+
+def test_cross_layer_identity_property(cfg):
+    """DCN-v2 cross with W=0, b=0 must be the identity map on x0."""
+    p = dcn_init(jax.random.PRNGKey(0), cfg)
+    p2 = dict(p)
+    p2["cross_w"] = [jnp.zeros_like(w) for w in p["cross_w"]]
+    p2["cross_b"] = [jnp.zeros_like(b) for b in p["cross_b"]]
+    rng = np.random.default_rng(5)
+    jb = {"dense": jnp.asarray(rng.normal(size=(4, cfg.n_dense)).astype(np.float32)),
+          "sparse_ids": jnp.asarray(rng.integers(0, 500, (4, cfg.n_sparse, 1)).astype(np.int32))}
+    # with zero cross weights, x stays x0 through every cross layer; the
+    # network reduces to MLP(x0) — check via re-running with 0 cross layers
+    from dataclasses import replace
+    cfg0 = replace(cfg, n_cross_layers=0)
+    p0 = dict(p2)
+    p0["cross_w"], p0["cross_b"] = [], []
+    out_a = dcn_forward(p2, jb, cfg)
+    out_b = dcn_forward(p0, jb, cfg0)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b), rtol=1e-5)
