@@ -1,0 +1,21 @@
+# Developer entry points. Tier-1 is the same command CI runs.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke bench deps-dev
+
+test:
+	$(PY) -m pytest -x -q
+
+# fast end-to-end sanity: the streaming benchmark at toy scale
+bench-smoke:
+	$(PY) -c "import sys; sys.path.insert(0, '.'); \
+	from benchmarks import bench_stream; \
+	r = bench_stream.run(n_nodes=512, batch_size=128, n_batches=6); \
+	assert r['steady_compiles'] == 0, r"
+
+bench:
+	$(PY) benchmarks/run.py
+
+deps-dev:
+	pip install -r requirements-dev.txt

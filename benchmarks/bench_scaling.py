@@ -56,10 +56,6 @@ def main():
     peel_collective_scaling()
 
 
-if __name__ == "__main__":
-    main()
-
-
 def peel_collective_scaling(csv=True):
     """Structural scaling of one distributed peel pass: per-device collective
     payload vs worker count (lowered HLO on fabricated devices; the paper's
@@ -72,8 +68,8 @@ def peel_collective_scaling(csv=True):
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core.distributed import make_peel_pass, shard_edges
+from repro.utils.compat import make_mesh_auto
 from repro.core.pbahmani import init_state
 from repro.graphs.generators import rmat
 from repro.launch.hlo_analysis import collective_stats
@@ -81,7 +77,7 @@ from repro.launch.hlo_analysis import collective_stats
 g = rmat(14, edge_factor=8, seed=1)
 print("workers,coll_bytes_per_pass_per_device,coll_ops")
 for w in (2, 4, 16, 64):
-    mesh = jax.make_mesh((w,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh_auto((w,), ("data",))
     peel = make_peel_pass(mesh, g.n_nodes, 0.05)
     src, dst = shard_edges(g, mesh)
     state = init_state(src, dst, g.n_nodes, g.n_edges)
@@ -99,3 +95,7 @@ for w in (2, 4, 16, 64):
         return
     if csv:
         print(out.stdout.strip())
+
+
+if __name__ == "__main__":
+    main()

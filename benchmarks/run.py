@@ -5,6 +5,7 @@
   bench_scaling  — paper Figs 7-19 analog (runtime/pass scaling)
   bench_kernels  — Pallas segsum micro-validation + XLA path timing
   bench_roofline — three-term roofline from the dry-run artifact
+  bench_stream   — streaming subsystem: ingest rate + query vs recompute
 """
 from __future__ import annotations
 
@@ -13,13 +14,14 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_density, bench_epsilon, bench_kernels,
-                            bench_roofline, bench_scaling)
+                            bench_roofline, bench_scaling, bench_stream)
     for name, fn in [
         ("bench_density (paper Table 3)", bench_density.main),
         ("bench_epsilon (paper Table 2)", bench_epsilon.run),
         ("bench_scaling (paper Figs 7-19)", bench_scaling.main),
         ("bench_kernels", bench_kernels.run),
         ("bench_roofline (single-pod)", bench_roofline.run),
+        ("bench_stream (dynamic graphs)", bench_stream.main),
     ]:
         print(f"\n=== {name} ===")
         t0 = time.time()
@@ -28,4 +30,12 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    import os
+    import sys
+
+    # direct invocation (python benchmarks/run.py) puts benchmarks/ on
+    # sys.path, not the repo root / src the package imports need
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
     main()

@@ -33,8 +33,8 @@ def main():
         if n_dev % m == 0:
             model = m
             break
-    mesh = jax.make_mesh((n_dev // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.compat import make_mesh_auto
+    mesh = make_mesh_auto((n_dev // model, model), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {n_dev} device(s)")
 
     print("generating RMAT graph (Graph500-style) ...")

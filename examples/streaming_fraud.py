@@ -1,0 +1,96 @@
+"""Streaming fraud-ring detection over an evolving transaction graph.
+
+Two regional payment graphs stream transaction batches into the
+multi-tenant StreamService. Midway, a fraud ring (dense block of colluding
+accounts) starts forming in one region. An operator loop watches the
+cross-tenant density leaderboard; when a tenant's density spikes it pulls
+the membership mask and recovers the ring — no rebuilds, no recompiles,
+exact densities (the incremental engine equals a from-scratch recompute).
+
+  PYTHONPATH=src python examples/streaming_fraud.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.stream import DeltaEngine, StreamService
+
+N_ACCOUNTS = 2000
+RING = 40           # colluding accounts
+STEPS = 24
+RING_STARTS = 10    # ring begins wiring up at this step
+
+
+def organic_batch(rng, size=300):
+    """Sparse background commerce: random account pairs."""
+    return rng.integers(0, N_ACCOUNTS, (size, 2))
+
+
+def ring_batch(rng, ring_ids, size=60):
+    """The ring densifies: random pairs *within* the colluding block."""
+    idx = rng.integers(0, len(ring_ids), (size, 2))
+    return np.stack([ring_ids[idx[:, 0]], ring_ids[idx[:, 1]]], axis=1)
+
+
+def main():
+    rng = np.random.default_rng(7)
+    svc = StreamService(max_tenants=8, refresh_every=50)
+    for region in ("payments-us", "payments-eu"):
+        svc.create_tenant(region, n_nodes=N_ACCOUNTS, capacity=1 << 14)
+
+    ring_ids = rng.choice(N_ACCOUNTS, RING, replace=False)
+    history: dict[str, list[float]] = {}
+    alerts: list[tuple[int, str, float]] = []
+    alerted: set[str] = set()
+
+    for step in range(STEPS):
+        for region in ("payments-us", "payments-eu"):
+            svc.apply_updates(region, insert=organic_batch(rng))
+            # old transactions age out of the sliding window
+            eng = svc.registry.get(region)
+            if eng.n_edges > 4000:
+                stale_edges = np.asarray(sorted(eng.buffer._slot))[:250]
+                svc.apply_updates(region, delete=stale_edges)
+        if step >= RING_STARTS:
+            svc.apply_updates("payments-eu", insert=ring_batch(rng, ring_ids))
+
+        board = svc.top_k_densest(k=2).value
+        for row in board:
+            hist = history.setdefault(row["tenant"], [])
+            # alarm: density doubled vs the trailing window (organic churn
+            # drifts slowly; a forming ring doubles in a couple of steps)
+            if (len(hist) >= 4 and row["tenant"] not in alerted
+                    and row["density"] > 2.0 * hist[-4]):
+                alerts.append((step, row["tenant"], row["density"]))
+                alerted.add(row["tenant"])
+            hist.append(row["density"])
+        top = board[0]
+        print(f"step {step:2d}  top={top['tenant']:12s} "
+              f"rho={top['density']:6.3f}  "
+              f"{'<-- ALERT' if alerts and alerts[-1][0] == step else ''}")
+
+    assert alerts, "fraud ring never tripped the density alarm"
+    step0, region, rho = alerts[0]
+    print(f"\nalert: {region} density {rho:.2f} at step {step0} "
+          f"(ring started at {RING_STARTS})")
+
+    # pull membership and score the ring recovery
+    resp = svc.membership(region)
+    flagged = np.where(resp.value["mask"])[0]
+    hits = len(set(flagged.tolist()) & set(ring_ids.tolist()))
+    recall = hits / RING
+    precision = hits / max(len(flagged), 1)
+    print(f"membership: {len(flagged)} accounts flagged, "
+          f"ring recall={100*recall:.0f}% precision={100*precision:.0f}%")
+
+    st = svc.stats(region).value
+    print(f"{region}: {st.n_update_batches} batches, {st.n_queries} queries, "
+          f"{st.n_refreshes} epoch refreshes, "
+          f"{DeltaEngine.compile_count()} executables compiled total")
+    assert recall >= 0.9, "ring recovery failed"
+
+
+if __name__ == "__main__":
+    main()

@@ -52,8 +52,15 @@ def _augment_once(
     dst: jax.Array,
     n_nodes: int,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One phase-2 round. Returns (member', m_v', m_e', n_added)."""
-    rho = m_e.astype(jnp.float32) / jnp.maximum(m_v, 1).astype(jnp.float32)
+    """One phase-2 round. Returns (member', m_v', m_e', n_added).
+
+    The legitimacy test ``e_into > rho`` is evaluated in exact integer
+    arithmetic: for integer e_into, ``e_into > m_e / m_v`` iff
+    ``e_into > m_e // m_v``. The float32 rho used previously could round
+    across an integer boundary once m_v grows past ~2^23, silently
+    absorbing (or rejecting) boundary vertices differently from the
+    float64 NumPy reference — pinned by the rounds=3 regression test.
+    """
     src_c = jnp.minimum(src, n_nodes - 1)
     dst_c = jnp.minimum(dst, n_nodes - 1)
     valid = (src < n_nodes) & (dst < n_nodes)
@@ -64,7 +71,7 @@ def _augment_once(
         into.astype(jnp.int32), jnp.minimum(src, n_nodes), num_segments=n_nodes + 1
     )[:n_nodes]
 
-    legit = ~member & (e_into.astype(jnp.float32) > rho)
+    legit = ~member & (e_into > m_e // jnp.maximum(m_v, 1))
     n_added = jnp.sum(legit.astype(jnp.int32))
 
     # intermediate_edges = edges(legit -> S) + edges within the legit set
@@ -135,10 +142,10 @@ def cbds_np(graph: Graph, rounds: int = 1) -> dict:
     member = coreness >= k_star
     n_legit = 0
     for _ in range(rounds):
-        rho = m_e / max(m_v, 1)
+        # exact integer form of e_into > m_e/m_v (see _augment_once)
         into = member[d] & ~member[s]
         e_into = np.bincount(s[into], minlength=n)
-        legit = ~member & (e_into > rho)
+        legit = ~member & (e_into > m_e // max(m_v, 1))
         if not legit.any():
             break
         inter = int(e_into[legit].sum()) + int((legit[s] & legit[d]).sum()) // 2

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.pbahmani import PeelState, init_state
 from repro.core.density import peel_threshold
 from repro.graphs.graph import Graph
+from repro.utils.compat import shard_map_compat
 
 
 def edge_sharding(mesh) -> NamedSharding:
@@ -93,9 +94,9 @@ def make_peel_pass(mesh, n_nodes: int, eps: float):
 
     state_spec = PeelState(deg=P(), active=P(), n_v=P(), n_e=P(),
                            best_density=P(), best_mask=P(), passes=P())
-    return jax.shard_map(body, mesh=mesh,
-                     in_specs=(state_spec, P(axes), P(axes)),
-                     out_specs=state_spec, check_vma=False)
+    return shard_map_compat(body, mesh=mesh,
+                            in_specs=(state_spec, P(axes), P(axes)),
+                            out_specs=state_spec, check_vma=False)
 
 
 def pbahmani_distributed(graph: Graph, mesh, eps: float = 0.0,
@@ -154,8 +155,9 @@ def make_kcore_level(mesh, n_nodes: int):
         )
 
     spec = DistCoreState(*(P() for _ in DistCoreState._fields))
-    return jax.shard_map(body, mesh=mesh, in_specs=(spec, P(axes), P(axes)),
-                     out_specs=spec, check_vma=False)
+    return shard_map_compat(body, mesh=mesh,
+                            in_specs=(spec, P(axes), P(axes)),
+                            out_specs=spec, check_vma=False)
 
 
 def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
@@ -166,7 +168,6 @@ def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
     level = make_kcore_level(mesh, n)
 
     def augment_body(member, m_v, m_e, src_l, dst_l):
-        rho = m_e.astype(jnp.float32) / jnp.maximum(m_v, 1).astype(jnp.float32)
         src_c = jnp.minimum(src_l, n - 1)
         dst_c = jnp.minimum(dst_l, n - 1)
         valid = (src_l < n) & (dst_l < n)
@@ -175,7 +176,8 @@ def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
             into.astype(jnp.int32), jnp.minimum(src_l, n),
             num_segments=n + 1)[:n]
         e_into = jax.lax.psum(e_into, axes)
-        legit = ~member & (e_into.astype(jnp.float32) > rho)
+        # exact integer form of e_into > m_e/m_v (see cbds._augment_once)
+        legit = ~member & (e_into > m_e // jnp.maximum(m_v, 1))
         inter_into = jnp.sum(jnp.where(legit, e_into, 0))
         legit_pair = valid & legit[src_c] & legit[dst_c]
         inter_cross = jax.lax.psum(
@@ -184,7 +186,7 @@ def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
         return (member_new, m_v + jnp.sum(legit.astype(jnp.int32)),
                 m_e + inter_into + inter_cross)
 
-    augment = jax.shard_map(
+    augment = shard_map_compat(
         augment_body, mesh=mesh,
         in_specs=(P(), P(), P(), P(axes), P(axes)),
         out_specs=(P(), P(), P()), check_vma=False)
@@ -198,8 +200,8 @@ def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
                 jnp.ones_like(src_l, jnp.int32), jnp.minimum(src_l, n),
                 num_segments=n + 1)[:n]
             return jax.lax.psum(d, axes)
-        deg = jax.shard_map(deg_body, mesh=mesh, in_specs=(P(axes),),
-                        out_specs=P(), check_vma=False)(src)
+        deg = shard_map_compat(deg_body, mesh=mesh, in_specs=(P(axes),),
+                               out_specs=P(), check_vma=False)(src)
         del ones
         s0 = DistCoreState(
             k=jnp.asarray(0, jnp.int32), deg=deg,

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.segsum import segment_sum_sorted
+from repro.utils.compat import shard_map_compat
 
 # interpret=True everywhere except a real TPU deployment.
 _INTERPRET = os.environ.get("PALLAS_INTERPRET", "1") != "0"
@@ -108,7 +109,7 @@ def vp_segment_sum(values: jax.Array, seg_ids: jax.Array, num_segments: int):
             out = jax.lax.psum(out, a)
         return out
 
-    out = jax.shard_map(
+    out = shard_map_compat(
         local, mesh=mesh,
         in_specs=(P(all_axes, None), P(all_axes)),
         out_specs=P(node_axes, None),

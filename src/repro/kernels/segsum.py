@@ -36,6 +36,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 V_TILE = 256  # output rows per block     (multiple of 8 sublanes & 128 MXU)
 E_TILE = 512  # edges per tile            (lane-aligned, contraction dim)
 
@@ -123,7 +126,7 @@ def segment_sum_sorted(
             out_specs=pl.BlockSpec((V_TILE, d_pad), lambda i, j, lo, hi: (i, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((v_pad, d_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -6,23 +6,22 @@ state. The dry-run sets XLA_FLAGS before any jax import to fabricate the
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.utils.compat import make_mesh_auto
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """Whatever devices exist right now (tests/examples on CPU)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh_auto((n // model, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

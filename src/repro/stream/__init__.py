@@ -1,0 +1,22 @@
+# Streaming dynamic-graph subsystem (ISSUE 1): incremental densest-subgraph
+# maintenance over evolving edge sets, plus a multi-tenant query service.
+#
+#   buffer.py   — fixed-capacity sentinel-padded edge buffer (pow-2 growth)
+#   delta.py    — incremental maintenance engine (degree deltas + warm peel)
+#   registry.py — multi-tenant named-graph registry (capacity bucketing, LRU)
+#   service.py  — batch query front-end with latency/compile metrics
+from repro.stream.buffer import EdgeBuffer
+from repro.stream.delta import DeltaEngine, QueryResult, UpdateStats
+from repro.stream.registry import GraphRegistry, TenantStats
+from repro.stream.service import StreamService, ServiceResponse
+
+__all__ = [
+    "EdgeBuffer",
+    "DeltaEngine",
+    "QueryResult",
+    "UpdateStats",
+    "GraphRegistry",
+    "TenantStats",
+    "StreamService",
+    "ServiceResponse",
+]

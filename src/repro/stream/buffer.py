@@ -1,0 +1,171 @@
+"""Fixed-capacity, sentinel-padded edge buffer for dynamic graphs.
+
+The static pipeline compiles one executable per padded edge-array shape
+(graphs/graph.py). A dynamic graph would re-pad — and therefore recompile —
+on every update batch. ``EdgeBuffer`` removes that: undirected edges live in
+``capacity`` slots (capacity is always a power of two), empty slots hold the
+sentinel vertex ``n_nodes``, and the device view is the same symmetric COO
+layout the peeling kernels already consume (``src = [u | v]``,
+``dst = [v | u]``, shape ``[2 * capacity]``). Capacity only ever *doubles*,
+so a graph that grows through k batches passes through at most log2 distinct
+shapes — every other batch is a jit cache hit (the "no recompiles on the hot
+path" contract, asserted in tests/test_stream.py).
+
+Deletions punch holes (slot -> sentinel) instead of compacting, keeping
+update cost O(batch); a free-list recycles holes for later insertions. The
+``epoch_compact`` hook rebuilds a dense prefix when the delta engine runs its
+staleness refresh.
+
+Host-side membership is a dict keyed on the canonical pair (min, max), the
+streaming analog of the paper's "super map": arbitrary update order, O(1)
+dedup, O(1) delete.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+
+MIN_CAPACITY = 256  # matches Graph.from_edges pad_multiple: shared jit shapes
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+class EdgeBuffer:
+    """Mutable undirected edge set with a static-shape device view."""
+
+    def __init__(self, n_nodes: int, capacity: int = MIN_CAPACITY):
+        if n_nodes <= 0:
+            raise ValueError("EdgeBuffer needs n_nodes >= 1")
+        capacity = max(next_pow2(capacity), MIN_CAPACITY)
+        self.n_nodes = int(n_nodes)
+        self.capacity = capacity
+        self._u = np.full(capacity, n_nodes, dtype=np.int32)
+        self._v = np.full(capacity, n_nodes, dtype=np.int32)
+        self._slot: dict[tuple[int, int], int] = {}
+        self._free: list[int] = list(range(capacity - 1, -1, -1))
+        self.generation = 0  # bumped on every grow/compact (shape/layout epoch)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return len(self._slot)
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_nodes
+
+    def __contains__(self, edge: tuple[int, int]) -> bool:
+        u, v = int(edge[0]), int(edge[1])
+        return (min(u, v), max(u, v)) in self._slot
+
+    # -- mutation -----------------------------------------------------------
+    def _canonicalize(self, edges: np.ndarray) -> np.ndarray:
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if edges.size and (edges.min() < 0 or edges.max() >= self.n_nodes):
+            raise ValueError(
+                f"edge endpoint out of range [0, {self.n_nodes}): "
+                f"min={edges.min()} max={edges.max()}"
+            )
+        u = np.minimum(edges[:, 0], edges[:, 1])
+        v = np.maximum(edges[:, 0], edges[:, 1])
+        keep = u != v  # simple-graph convention: drop self-loops
+        return np.stack([u[keep], v[keep]], axis=1)
+
+    def apply(
+        self, insert: np.ndarray | None = None, delete: np.ndarray | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Apply a batch. Returns the *effective*
+        ``(inserted [k,2], ins_slots [k], deleted [m,2], del_slots [m])``:
+        inserts already present and deletes of absent edges are dropped.
+        Deletes are applied first (stream semantics: a batch is a set of
+        retractions followed by assertions), so an insert may reuse a slot
+        freed by a delete in the same batch. Slot indices let the delta
+        engine patch its device-resident arrays in O(batch)."""
+        deleted, del_slots = [], []
+        if delete is not None:
+            for u, v in self._canonicalize(delete):
+                slot = self._slot.pop((int(u), int(v)), None)
+                if slot is None:
+                    continue
+                self._u[slot] = self.sentinel
+                self._v[slot] = self.sentinel
+                self._free.append(slot)
+                deleted.append((int(u), int(v)))
+                del_slots.append(slot)
+        inserted, ins_slots = [], []
+        if insert is not None:
+            ins = self._canonicalize(insert)
+            if ins.size:
+                ins = np.unique(ins, axis=0)
+            new = [
+                (int(u), int(v)) for u, v in ins if (int(u), int(v)) not in self._slot
+            ]
+            # grow once, up front, if the effective batch cannot fit
+            if len(self._slot) + len(new) > self.capacity:
+                self._grow(next_pow2(len(self._slot) + len(new)))
+            for key in new:
+                slot = self._free.pop()
+                self._slot[key] = slot
+                self._u[slot] = key[0]
+                self._v[slot] = key[1]
+                inserted.append(key)
+                ins_slots.append(slot)
+        return (
+            np.asarray(inserted, dtype=np.int32).reshape(-1, 2),
+            np.asarray(ins_slots, dtype=np.int32),
+            np.asarray(deleted, dtype=np.int32).reshape(-1, 2),
+            np.asarray(del_slots, dtype=np.int32),
+        )
+
+    def _grow(self, new_capacity: int) -> None:
+        new_capacity = max(next_pow2(new_capacity), 2 * self.capacity)
+        u = np.full(new_capacity, self.sentinel, dtype=np.int32)
+        v = np.full(new_capacity, self.sentinel, dtype=np.int32)
+        u[: self.capacity] = self._u
+        v[: self.capacity] = self._v
+        self._free = list(range(new_capacity - 1, self.capacity - 1, -1)) + self._free
+        self._u, self._v = u, v
+        self.capacity = new_capacity
+        self.generation += 1
+
+    def epoch_compact(self) -> None:
+        """Rebuild a dense slot prefix (hole-free). Called by the delta
+        engine's epoch refresh; O(n_edges), amortized away by the epoch."""
+        pairs = sorted(self._slot)
+        self._u.fill(self.sentinel)
+        self._v.fill(self.sentinel)
+        self._slot = {}
+        for i, (u, v) in enumerate(pairs):
+            self._slot[(u, v)] = i
+            self._u[i] = u
+            self._v[i] = v
+        self._free = list(range(self.capacity - 1, len(pairs) - 1, -1))
+        self.generation += 1
+
+    # -- views --------------------------------------------------------------
+    def device_view(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) symmetric COO, shape [2 * capacity], sentinel-padded —
+        drop-in for the ``Graph.src``/``Graph.dst`` convention. Holes carry
+        the sentinel so every edge-masked reduction skips them for free."""
+        src = np.concatenate([self._u, self._v])
+        dst = np.concatenate([self._v, self._u])
+        return src, dst
+
+    def to_graph(self) -> Graph:
+        """Materialize an immutable Graph (compacted) — the oracle view."""
+        if not self._slot:
+            return Graph.from_edges(np.zeros((0, 2), np.int64), n_nodes=self.n_nodes)
+        pairs = np.asarray(sorted(self._slot), dtype=np.int64)
+        return Graph.from_edges(pairs, n_nodes=self.n_nodes)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"EdgeBuffer(|V|={self.n_nodes}, |E|={self.n_edges}, "
+            f"capacity={self.capacity}, gen={self.generation})"
+        )
+
+
+__all__ = ["EdgeBuffer", "next_pow2", "MIN_CAPACITY"]

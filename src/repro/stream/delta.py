@@ -1,0 +1,374 @@
+"""Incremental densest-subgraph maintenance over an EdgeBuffer.
+
+The static path pays O(|E|) twice per query: once on host (re-padding the
+edge arrays) and once on device (the degree histogram inside
+``_pbahmani_jit``). ``DeltaEngine`` keeps the graph *resident*: the symmetric
+COO arrays live on device and each update batch is one fused jitted call
+(``_apply_batch_jit``) that
+
+  * patches the edge slots touched by the batch (scatter, ``mode="drop"``
+    for the padding lanes), and
+  * applies the degree delta as a ``segment_sum`` over just the batch
+    endpoints — O(batch), not O(|E|); the paper's ``atomicAdd``/``atomicSub``
+    pair collapses into one signed histogram.
+
+Queries then run the peel loop from the *maintained* integer state
+(``_warm_peel_jit``). Because degree maintenance is exact integer
+arithmetic, the warm initial state is bit-identical to what a from-scratch
+``init_state`` would compute, so the peel trajectory — and the reported
+density — EQUALS a cold ``pbahmani`` recompute on the materialized graph
+(the oracle property asserted in tests/test_stream.py). The previous best
+mask is re-evaluated on the current graph inside the same jit call
+(Sukprasert et al., arXiv:2311.04333 warm-start): its density is a valid
+anytime lower bound that often beats the fresh peel right after deletions,
+and is reported alongside (``warm_density``/``warm_mask``) without
+perturbing the oracle-exact ``density``.
+
+Shape discipline: batches are padded to power-of-two lengths and edge
+arrays only double (buffer.py), so a long stream of same-capacity batches
+compiles each executable once (compile-count assertion in tests). A
+staleness counter triggers an *epoch refresh* every ``refresh_every``
+batches: the buffer compacts its slots, device state is rebuilt, and the
+query runs through the existing ``_pbahmani_jit`` path — this bounds
+slot-fragmentation drift and re-anchors the maintained state.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cbds import _cbds_jit
+from repro.core.density import induced_edge_count
+from repro.core.pbahmani import PeelState, _pbahmani_jit, pbahmani_pass
+from repro.stream.buffer import EdgeBuffer, MIN_CAPACITY, next_pow2
+
+MIN_BATCH = 64  # smallest padded update-batch shape (pow-2 buckets above)
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _apply_batch_jit(
+    src: jax.Array,
+    dst: jax.Array,
+    deg: jax.Array,
+    slots: jax.Array,   # int32 [B] slot index, OOB (=len(src)) for padding
+    su: jax.Array,      # int32 [B] slot value u (sentinel for deletes/pad)
+    sv: jax.Array,      # int32 [B] slot value v
+    du: jax.Array,      # int32 [B] degree endpoint u (sentinel for padding)
+    dv: jax.Array,      # int32 [B] degree endpoint v
+    w: jax.Array,       # int32 [B] +1 insert / -1 delete / 0 padding
+    n_nodes: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One update batch: edge-slot scatter + signed degree histogram."""
+    cap = src.shape[0] // 2
+    src = src.at[slots].set(su, mode="drop").at[slots + cap].set(sv, mode="drop")
+    dst = dst.at[slots].set(sv, mode="drop").at[slots + cap].set(su, mode="drop")
+    d_u = jax.ops.segment_sum(w, jnp.minimum(du, n_nodes), num_segments=n_nodes + 1)
+    d_v = jax.ops.segment_sum(w, jnp.minimum(dv, n_nodes), num_segments=n_nodes + 1)
+    deg = (deg + d_u[:n_nodes] + d_v[:n_nodes]).astype(jnp.int32)
+    return src, dst, deg
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+def _warm_peel_jit(
+    src: jax.Array,
+    dst: jax.Array,
+    deg: jax.Array,
+    n_edges: jax.Array,
+    prev_mask: jax.Array,
+    n_nodes: int,
+    eps: float,
+) -> tuple[PeelState, jax.Array]:
+    """Peel from the maintained degree array (skips the O(|E|) histogram of
+    ``init_state``; bit-identical state, hence identical result) and
+    re-evaluate the previous best mask on the current graph."""
+    active = deg > 0
+    n_v = jnp.sum(active.astype(jnp.int32))
+    n_e = n_edges.astype(jnp.int32)
+    rho0 = n_e.astype(jnp.float32) / jnp.maximum(n_v, 1).astype(jnp.float32)
+    state = PeelState(
+        deg=deg.astype(jnp.int32),
+        active=active,
+        n_v=n_v,
+        n_e=n_e,
+        best_density=rho0,
+        best_mask=active,
+        passes=jnp.asarray(0, jnp.int32),
+    )
+    final = jax.lax.while_loop(
+        lambda s: s.n_v > 0,
+        lambda s: pbahmani_pass(s, src, dst, n_nodes, eps),
+        state,
+    )
+    warm_e = induced_edge_count(src, dst, prev_mask, n_nodes)
+    warm_v = jnp.sum(prev_mask.astype(jnp.int32))
+    warm_rho = jnp.where(
+        warm_v > 0, warm_e.astype(jnp.float32) / jnp.maximum(warm_v, 1), 0.0
+    )
+    return final, warm_rho
+
+
+@dataclass
+class UpdateStats:
+    """Outcome of one ``apply_updates`` batch."""
+
+    n_inserted: int
+    n_deleted: int
+    n_edges: int
+    batch_capacity: int   # padded device batch shape actually dispatched
+    regrew: bool          # buffer capacity doubled (new compile shape)
+    latency_ms: float
+
+
+@dataclass
+class QueryResult:
+    density: float            # oracle-exact: == cold pbahmani on this graph
+    mask: np.ndarray          # bool [n_nodes] achieving ``density``
+    passes: int
+    warm_density: float       # max(density, prev-mask re-evaluation)
+    warm_mask: np.ndarray     # mask achieving ``warm_density``
+    refreshed: bool           # this query ran the epoch-refresh path
+    latency_ms: float = 0.0
+
+
+@dataclass
+class EngineMetrics:
+    n_update_batches: int = 0
+    n_queries: int = 0
+    n_refreshes: int = 0
+    update_ms_total: float = 0.0
+    query_ms_total: float = 0.0
+    shape_buckets: set = field(default_factory=set)
+
+
+class DeltaEngine:
+    """Dynamic graph + online densest-subgraph queries for one tenant."""
+
+    def __init__(
+        self,
+        n_nodes: int,
+        eps: float = 0.0,
+        capacity: int = MIN_CAPACITY,
+        refresh_every: int = 32,
+    ):
+        if n_nodes <= 0:
+            raise ValueError("DeltaEngine needs n_nodes >= 1")
+        self.n_nodes = int(n_nodes)
+        # pad the vertex space to a power of two: tenants of similar size
+        # share compiled executables (registry.py bucketing)
+        self.node_capacity = max(next_pow2(self.n_nodes), 2)
+        self.eps = float(eps)
+        self.refresh_every = int(refresh_every)
+        self.buffer = EdgeBuffer(self.node_capacity, capacity=capacity)
+        self.metrics = EngineMetrics()
+        self._src = None          # device int32 [2*capacity], sentinel-padded
+        self._dst = None
+        self._deg = None          # device int32 [node_capacity]
+        self._generation = -1     # buffer generation mirrored on device
+        self._prev_mask = jnp.zeros(self.node_capacity, dtype=bool)
+        self._updates_since_refresh = 0
+        self._cached_query: QueryResult | None = None
+
+    # -- device-state management -------------------------------------------
+    @property
+    def sentinel(self) -> int:
+        return self.node_capacity
+
+    def _resync_device(self) -> None:
+        """Full O(|E|) upload — on first use, regrow, or epoch compaction."""
+        src, dst = self.buffer.device_view()
+        self._src = jnp.asarray(src)
+        self._dst = jnp.asarray(dst)
+        valid = src[src < self.sentinel]
+        deg = np.bincount(valid, minlength=self.node_capacity)
+        self._deg = jnp.asarray(deg[: self.node_capacity], dtype=jnp.int32)
+        self._generation = self.buffer.generation
+
+    def _check_endpoints(self, edges) -> None:
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if e.size and (e.min() < 0 or e.max() >= self.n_nodes):
+            raise ValueError(
+                f"edge endpoint out of range [0, {self.n_nodes}): "
+                f"min={e.min()} max={e.max()}"
+            )
+
+    # -- ingest -------------------------------------------------------------
+    def apply_updates(self, insert=None, delete=None) -> UpdateStats:
+        t0 = time.perf_counter()
+        if insert is not None:
+            self._check_endpoints(insert)
+        if delete is not None:
+            self._check_endpoints(delete)
+        if self._generation < 0:
+            self._resync_device()
+
+        gen_before = self.buffer.generation
+        ins, ins_slots, dele, del_slots = self.buffer.apply(insert, delete)
+        regrew = self.buffer.generation != gen_before
+
+        if regrew:
+            # capacity doubled: slots moved shape, rebuild device state whole
+            self._resync_device()
+        else:
+            n = ins.shape[0] + dele.shape[0]
+            b = max(next_pow2(max(n, 1)), MIN_BATCH)
+            sent = self.sentinel
+            slots = np.full(b, 2 * self.buffer.capacity, np.int32)  # OOB pad
+            su = np.full(b, sent, np.int32)
+            sv = np.full(b, sent, np.int32)
+            du = np.full(b, sent, np.int32)
+            dv = np.full(b, sent, np.int32)
+            w = np.zeros(b, np.int32)
+            # deletes first; an insert reusing a freed slot must win the
+            # scatter, so drop the delete's slot write (its degree delta and
+            # the insert's are independent — keyed on endpoints, not slots)
+            m = dele.shape[0]
+            if m:
+                keep = ~np.isin(del_slots, ins_slots)
+                dslots = np.where(keep, del_slots, 2 * self.buffer.capacity)
+                slots[:m] = dslots
+                du[:m], dv[:m] = dele[:, 0], dele[:, 1]
+                w[:m] = -1
+            k = ins.shape[0]
+            if k:
+                slots[m : m + k] = ins_slots
+                su[m : m + k], sv[m : m + k] = ins[:, 0], ins[:, 1]
+                du[m : m + k], dv[m : m + k] = ins[:, 0], ins[:, 1]
+                w[m : m + k] = 1
+            self._src, self._dst, self._deg = _apply_batch_jit(
+                self._src, self._dst, self._deg,
+                jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
+                jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
+                self.node_capacity,
+            )
+            self.metrics.shape_buckets.add((2 * self.buffer.capacity, b))
+
+        self._updates_since_refresh += 1
+        self._cached_query = None  # graph changed: next query recomputes
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.n_update_batches += 1
+        self.metrics.update_ms_total += ms
+        return UpdateStats(
+            n_inserted=int(ins.shape[0]),
+            n_deleted=int(dele.shape[0]),
+            n_edges=self.buffer.n_edges,
+            batch_capacity=0 if regrew else int(b),
+            regrew=regrew,
+            latency_ms=ms,
+        )
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def stale(self) -> bool:
+        return self._updates_since_refresh >= self.refresh_every
+
+    def refresh(self) -> QueryResult:
+        """Epoch refresh: compact the buffer, rebuild device state, and run
+        the query through the existing static ``_pbahmani_jit`` path."""
+        t0 = time.perf_counter()
+        self.buffer.epoch_compact()
+        self._resync_device()
+        self._updates_since_refresh = 0
+        final = _pbahmani_jit(
+            self._src, self._dst, self.node_capacity,
+            jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps,
+        )
+        self._prev_mask = final.best_mask
+        density = float(final.best_density)
+        mask = np.asarray(final.best_mask)[: self.n_nodes]
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.n_refreshes += 1
+        self.metrics.n_queries += 1
+        self.metrics.query_ms_total += ms
+        self._cached_query = QueryResult(
+            density=density, mask=mask, passes=int(final.passes),
+            warm_density=density, warm_mask=mask.copy(),
+            refreshed=True, latency_ms=ms,
+        )
+        return self._cached_query
+
+    def query(self) -> QueryResult:
+        """Densest-subgraph query on the current graph. Warm path unless the
+        staleness counter says the epoch is due; repeat queries on an
+        unchanged graph return the memoized result."""
+        if self._cached_query is not None:
+            return self._cached_query
+        if self._generation < 0:
+            self._resync_device()
+        if self.stale:
+            return self.refresh()
+        t0 = time.perf_counter()
+        final, warm_rho = _warm_peel_jit(
+            self._src, self._dst, self._deg,
+            jnp.asarray(self.buffer.n_edges, jnp.int32),
+            self._prev_mask, self.node_capacity, self.eps,
+        )
+        density = float(final.best_density)
+        warm_rho = float(warm_rho)
+        mask = np.asarray(final.best_mask)[: self.n_nodes]
+        if warm_rho > density:
+            warm_density = warm_rho
+            warm_mask = np.asarray(self._prev_mask)[: self.n_nodes]
+            # keep the stronger candidate as next query's warm seed
+        else:
+            warm_density = density
+            warm_mask = mask.copy()
+            self._prev_mask = final.best_mask
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.n_queries += 1
+        self.metrics.query_ms_total += ms
+        self._cached_query = QueryResult(
+            density=density, mask=mask, passes=int(final.passes),
+            warm_density=warm_density, warm_mask=warm_mask,
+            refreshed=False, latency_ms=ms,
+        )
+        return self._cached_query
+
+    def density(self) -> float:
+        return self.query().density
+
+    def cbds(self, rounds: int = 1) -> dict:
+        """CBDS-P on the current graph through the existing ``_cbds_jit``."""
+        if self._generation < 0:
+            self._resync_device()
+        res = _cbds_jit(
+            self._src, self._dst, self.node_capacity,
+            jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
+        )
+        return {
+            "density": float(res.density),
+            "core_density": float(res.core_density),
+            "k_star": int(res.k_star),
+            "member_mask": np.asarray(res.member_mask)[: self.n_nodes],
+            "n_legit": int(res.n_legit),
+        }
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return self.buffer.n_edges
+
+    @staticmethod
+    def compile_count() -> int:
+        """Total executables compiled for the engine's jitted entry points.
+        Class-level: the jit caches are shared by every engine/tenant — that
+        sharing is exactly what the registry's capacity bucketing buys."""
+        total = 0
+        for fn in (_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit):
+            total += fn._cache_size()
+        return total
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"DeltaEngine(|V|={self.n_nodes}/{self.node_capacity}, "
+            f"|E|={self.buffer.n_edges}, eps={self.eps}, "
+            f"stale_in={self.refresh_every - self._updates_since_refresh})"
+        )
+
+
+__all__ = ["DeltaEngine", "QueryResult", "UpdateStats", "EngineMetrics",
+           "MIN_BATCH"]

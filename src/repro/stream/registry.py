@@ -1,0 +1,140 @@
+"""Multi-tenant named-graph registry with executable-sharing buckets.
+
+A serving deployment holds many evolving graphs (one per customer, region,
+or product surface). Compiling a peel executable per tenant would defeat the
+point of the static-shape discipline, so the registry normalizes every
+tenant onto shared compile buckets:
+
+  * vertex space  -> next power of two (``DeltaEngine.node_capacity``)
+  * edge capacity -> next power of two   (``EdgeBuffer`` growth rule)
+  * update batch  -> next power of two   (``delta.MIN_BATCH`` floor)
+
+The jitted entry points in delta.py are module-level, keyed only on
+(shape, n_nodes, eps), so two tenants in the same buckets hit the same
+executables — ``DeltaEngine.compile_count()`` stays flat as tenants are
+added (asserted in tests/test_stream.py).
+
+Eviction is plain LRU on engine *access* (updates and queries both touch):
+the registry is a cache of warm device state, not the system of record —
+an evicted tenant can be re-registered and replayed from its stream.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+from repro.stream.buffer import MIN_CAPACITY, next_pow2
+from repro.stream.delta import DeltaEngine
+
+
+@dataclass
+class TenantStats:
+    name: str
+    n_nodes: int
+    node_capacity: int
+    n_edges: int
+    edge_capacity: int
+    eps: float
+    n_update_batches: int
+    n_queries: int
+    n_refreshes: int
+    update_ms_total: float
+    query_ms_total: float
+
+
+class GraphRegistry:
+    """Name -> DeltaEngine map with capacity bucketing + LRU eviction."""
+
+    def __init__(self, max_tenants: int = 64, eps: float = 0.0,
+                 refresh_every: int = 32):
+        if max_tenants <= 0:
+            raise ValueError("max_tenants must be >= 1")
+        self.max_tenants = int(max_tenants)
+        self.default_eps = float(eps)
+        self.default_refresh_every = int(refresh_every)
+        self._engines: OrderedDict[str, DeltaEngine] = OrderedDict()
+        self.evictions = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def register(
+        self,
+        name: str,
+        n_nodes: int,
+        eps: float | None = None,
+        capacity: int = MIN_CAPACITY,
+        refresh_every: int | None = None,
+    ) -> DeltaEngine:
+        """Create (or return the existing) engine for ``name``.
+
+        Re-registering with the same logical config is an idempotent no-op;
+        a conflicting config raises rather than silently handing back an
+        engine sized for a different graph."""
+        if name in self._engines:
+            eng = self.get(name)
+            want_eps = self.default_eps if eps is None else float(eps)
+            if eng.n_nodes != int(n_nodes) or eng.eps != want_eps:
+                raise ValueError(
+                    f"tenant {name!r} already registered with "
+                    f"n_nodes={eng.n_nodes}, eps={eng.eps}; got "
+                    f"n_nodes={n_nodes}, eps={want_eps}"
+                )
+            return eng
+        eng = DeltaEngine(
+            n_nodes=n_nodes,
+            eps=self.default_eps if eps is None else float(eps),
+            capacity=next_pow2(capacity),
+            refresh_every=(
+                self.default_refresh_every if refresh_every is None
+                else int(refresh_every)
+            ),
+        )
+        self._engines[name] = eng
+        self._engines.move_to_end(name)
+        while len(self._engines) > self.max_tenants:
+            self._engines.popitem(last=False)
+            self.evictions += 1
+        return eng
+
+    def get(self, name: str) -> DeltaEngine:
+        eng = self._engines.get(name)
+        if eng is None:
+            raise KeyError(f"unknown tenant {name!r}")
+        self._engines.move_to_end(name)  # LRU touch
+        return eng
+
+    def remove(self, name: str) -> None:
+        self._engines.pop(name, None)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._engines
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def names(self) -> list[str]:
+        """Tenants, least-recently-used first."""
+        return list(self._engines)
+
+    # -- stats --------------------------------------------------------------
+    def stats(self, name: str) -> TenantStats:
+        eng = self._engines[name]  # no LRU touch: stats are observability
+        m = eng.metrics
+        return TenantStats(
+            name=name,
+            n_nodes=eng.n_nodes,
+            node_capacity=eng.node_capacity,
+            n_edges=eng.n_edges,
+            edge_capacity=eng.buffer.capacity,
+            eps=eng.eps,
+            n_update_batches=m.n_update_batches,
+            n_queries=m.n_queries,
+            n_refreshes=m.n_refreshes,
+            update_ms_total=m.update_ms_total,
+            query_ms_total=m.query_ms_total,
+        )
+
+    def all_stats(self) -> list[TenantStats]:
+        return [self.stats(n) for n in self._engines]
+
+
+__all__ = ["GraphRegistry", "TenantStats"]

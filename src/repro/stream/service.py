@@ -1,0 +1,159 @@
+"""Batch query front-end over the tenant registry.
+
+The serving surface the ROADMAP's north star needs: callers speak in named
+tenants and structured requests; the service routes to the right
+``DeltaEngine``, measures latency, and exposes the compile counter so an
+operator can alarm on recompile storms (the steady state is zero compiles
+per request — see tests/test_stream.py).
+
+Operations
+  ``apply_updates``  ingest one insert/delete batch for a tenant
+  ``density``        oracle-exact densest-subgraph density (warm peel)
+  ``membership``     boolean vertex mask of the best subgraph
+  ``top_k_densest``  cross-tenant leaderboard (fraud triage: which graph
+                     grew the hottest ring since the last sweep)
+  ``stats``          per-tenant counters for dashboards
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.stream.buffer import MIN_CAPACITY
+from repro.stream.delta import DeltaEngine
+from repro.stream.registry import GraphRegistry
+
+
+@dataclass
+class ServiceResponse:
+    ok: bool
+    op: str
+    tenant: str | None
+    value: Any
+    latency_ms: float
+    compiles: int          # total executables compiled so far (flat = healthy)
+    error: str | None = None
+
+
+@dataclass
+class ServiceMetrics:
+    n_requests: int = 0
+    n_errors: int = 0
+    latency_ms_total: float = 0.0
+    by_op: dict = field(default_factory=dict)
+
+
+class StreamService:
+    """Single-process front-end; one registry, many tenants."""
+
+    def __init__(self, max_tenants: int = 64, eps: float = 0.0,
+                 refresh_every: int = 32):
+        self.registry = GraphRegistry(
+            max_tenants=max_tenants, eps=eps, refresh_every=refresh_every
+        )
+        self.metrics = ServiceMetrics()
+
+    # -- plumbing -----------------------------------------------------------
+    def _respond(self, op: str, tenant: str | None, t0: float,
+                 value: Any = None, error: str | None = None) -> ServiceResponse:
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.n_requests += 1
+        self.metrics.latency_ms_total += ms
+        per_op = self.metrics.by_op.setdefault(op, {"n": 0, "ms": 0.0})
+        per_op["n"] += 1
+        per_op["ms"] += ms
+        if error is not None:
+            self.metrics.n_errors += 1
+        return ServiceResponse(
+            ok=error is None, op=op, tenant=tenant, value=value,
+            latency_ms=ms, compiles=DeltaEngine.compile_count(), error=error,
+        )
+
+    def _engine(self, tenant: str) -> DeltaEngine:
+        return self.registry.get(tenant)
+
+    # -- tenant lifecycle ---------------------------------------------------
+    def create_tenant(self, tenant: str, n_nodes: int, eps: float | None = None,
+                      capacity: int = MIN_CAPACITY) -> ServiceResponse:
+        t0 = time.perf_counter()
+        try:
+            eng = self.registry.register(tenant, n_nodes, eps=eps,
+                                         capacity=capacity)
+        except (ValueError, KeyError) as e:
+            return self._respond("create_tenant", tenant, t0, error=str(e))
+        return self._respond(
+            "create_tenant", tenant, t0,
+            value={"node_capacity": eng.node_capacity,
+                   "edge_capacity": eng.buffer.capacity},
+        )
+
+    # -- ingest -------------------------------------------------------------
+    def apply_updates(self, tenant: str, insert=None,
+                      delete=None) -> ServiceResponse:
+        t0 = time.perf_counter()
+        try:
+            stats = self._engine(tenant).apply_updates(insert=insert,
+                                                       delete=delete)
+        except (ValueError, KeyError) as e:
+            return self._respond("apply_updates", tenant, t0, error=str(e))
+        return self._respond("apply_updates", tenant, t0, value=stats)
+
+    # -- queries ------------------------------------------------------------
+    def density(self, tenant: str) -> ServiceResponse:
+        t0 = time.perf_counter()
+        try:
+            q = self._engine(tenant).query()
+        except (ValueError, KeyError) as e:
+            return self._respond("density", tenant, t0, error=str(e))
+        return self._respond(
+            "density", tenant, t0,
+            value={"density": q.density, "warm_density": q.warm_density,
+                   "passes": q.passes, "refreshed": q.refreshed},
+        )
+
+    def membership(self, tenant: str, warm: bool = False) -> ServiceResponse:
+        t0 = time.perf_counter()
+        try:
+            q = self._engine(tenant).query()
+        except (ValueError, KeyError) as e:
+            return self._respond("membership", tenant, t0, error=str(e))
+        mask = q.warm_mask if warm else q.mask
+        return self._respond(
+            "membership", tenant, t0,
+            value={"mask": np.asarray(mask),
+                   "density": q.warm_density if warm else q.density,
+                   "n_members": int(np.asarray(mask).sum())},
+        )
+
+    def top_k_densest(self, k: int = 5) -> ServiceResponse:
+        """Cross-tenant sweep, densest first. Queries every tenant (warm
+        path), so steady-state cost is one peel per tenant, zero compiles."""
+        t0 = time.perf_counter()
+        board = []
+        try:
+            for name in list(self.registry.names()):
+                eng = self.registry.get(name)
+                q = eng.query()
+                board.append({"tenant": name, "density": q.density,
+                              "warm_density": q.warm_density,
+                              "n_edges": eng.n_edges})
+        except (ValueError, KeyError) as e:
+            return self._respond("top_k_densest", None, t0, error=str(e))
+        board.sort(key=lambda r: -r["density"])
+        return self._respond("top_k_densest", None, t0, value=board[: int(k)])
+
+    # -- observability ------------------------------------------------------
+    def stats(self, tenant: str | None = None) -> ServiceResponse:
+        t0 = time.perf_counter()
+        try:
+            value = (self.registry.all_stats() if tenant is None
+                     else self.registry.stats(tenant))
+        except KeyError as e:
+            return self._respond("stats", tenant, t0, error=str(e))
+        return self._respond("stats", tenant, t0, value=value)
+
+
+__all__ = ["StreamService", "ServiceResponse", "ServiceMetrics"]

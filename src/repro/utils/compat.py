@@ -1,0 +1,40 @@
+"""jax version compatibility shims.
+
+The repo targets current jax (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``); the pinned container ships an older release
+(``jax.experimental.shard_map`` with ``check_rep``, no ``AxisType``). These
+two helpers are the only places that difference is allowed to appear — all
+mesh construction and shard_map entry points route through here so both
+toolchains run the same code (CI installs latest jax, tier-1 runs on the
+container's pin).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh_auto(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        axis_types=(AxisType.Auto,) * len(tuple(axis_names)),
+    )
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map``; falls back to the experimental API where the
+    replication check flag is still called ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
+
+
+__all__ = ["make_mesh_auto", "shard_map_compat"]

@@ -143,8 +143,8 @@ def test_peel_with_restarts(tmp_path):
     from repro.graphs.generators import planted_dense
     from repro.core import pbahmani_np
 
-    mesh = _jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.compat import make_mesh_auto
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     g, _, _ = planted_dense(400, 30, seed=2)
     ck = CheckpointManager(str(tmp_path / "peel"), keep=2)
     res = peel_with_restarts(g, mesh, eps=0.05, ckpt=ck, fail_at_pass=2)

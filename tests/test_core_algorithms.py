@@ -13,7 +13,7 @@ import math
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     cbds_np, cbds_p, charikar, exact_densest, kcore_decompose, kcore_np,
@@ -135,6 +135,25 @@ def test_cbds_multi_round_monotone(er_graph):
     d1 = cbds_p(er_graph, rounds=1)["density"]
     d3 = cbds_p(er_graph, rounds=3)["density"]
     assert d3 >= d1 - 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cbds_rounds3_jax_matches_np(seed):
+    """Regression: multi-round phase 2 must absorb the same legit sets in
+    both paths. The legitimacy threshold is integer-exact (e_into > m_e//m_v)
+    so jax (formerly float32 rho) and numpy (float64 rho) cannot diverge on
+    boundary vertices as rounds compound."""
+    g = random_graph(seed, 150, 0.06)
+    rn = cbds_np(g, rounds=3)
+    rj = cbds_p(g, rounds=3)
+    assert rj["density"] == pytest.approx(rn["density"], rel=1e-6)
+    assert rj["n_legit"] == rn["n_legit"]
+    assert np.array_equal(rj["member_mask"], rn["member_mask"])
+    # bookkept edge count == actual induced edge count (no double-counting
+    # as later rounds absorb sets overlapping earlier rounds' neighborhoods)
+    assert g.subgraph_density(rj["member_mask"]) == pytest.approx(
+        rj["density"], abs=2e-4)
 
 
 def test_paper_table3_shape(named_graph):

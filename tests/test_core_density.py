@@ -4,7 +4,7 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import exact_densest, check_approx_bound, subgraph_density
 from repro.core.density import induced_edge_count, masked_degrees

@@ -22,8 +22,8 @@ def run_multidev(script: str, devices: int = 8) -> str:
 
 PREAMBLE = """
 import jax, numpy as np, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.utils.compat import make_mesh_auto
+mesh = make_mesh_auto((2, 4), ("data", "model"))
 """
 
 
@@ -120,16 +120,17 @@ print("OK")
 def test_compressed_psum():
     run_multidev("""
 import jax, numpy as np, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from repro.optim import compressed_psum
-mesh = jax.make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh_auto, shard_map_compat
+mesh = make_mesh_auto((8,), ("d",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32))
 
 def body(xl):
     return compressed_psum(xl[0], "d")
 
-out = jax.shard_map(body, mesh=mesh, in_specs=(P("d", None, None),),
-                    out_specs=P(), check_vma=False)(x)
+out = shard_map_compat(body, mesh=mesh, in_specs=(P("d", None, None),),
+                       out_specs=P(), check_vma=False)(x)
 exact = np.asarray(x).sum(axis=0)
 rel = np.abs(np.asarray(out) - exact).max() / np.abs(exact).max()
 assert rel < 0.02, rel   # int8 quantization error bound
@@ -151,10 +152,11 @@ print("saved")
     run_multidev(script_save)
     script_load = """
 import jax, numpy as np, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.launch.train import restore_elastic
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh_auto
+mesh = make_mesh_auto((8,), ("data",))
 mgr = CheckpointManager(%r)
 step, st = restore_elastic(
     mgr, {"w": np.zeros((8, 8))},
@@ -184,13 +186,13 @@ def test_vp_segment_sum_matches_reference():
     """Vertex-partitioned aggregation (EXPERIMENTS §Perf #2) == oracle."""
     run_multidev("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.utils.compat import make_mesh_auto
 from repro.kernels import ops as kops
 from repro.kernels.ref import segment_sum_ref
 from repro.graphs.generators import erdos_renyi
 from repro.graphs.partition import partition_by_dst_block
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh_auto((4, 2), ("data", "model"))
 n = 512
 g = erdos_renyi(n, 0.05, seed=3)
 src, dst, _ = partition_by_dst_block(g, 4)
