@@ -2,10 +2,22 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench deps-dev
+# algorithm-core test modules: the coverage floor is enforced on these
+COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
+	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
+	tests/test_prune.py tests/test_oracle_properties.py
+
+.PHONY: test coverage bench-smoke bench-prune-smoke bench deps-dev
 
 test:
 	$(PY) -m pytest -x -q
+
+# line-coverage floor on the algorithm core + streaming subsystem
+# (needs pytest-cov: `make deps-dev`)
+coverage:
+	$(PY) -m pytest -q $(COV_TESTS) \
+		--cov=repro.core --cov=repro.stream \
+		--cov-report=term-missing --cov-fail-under=75
 
 # fast end-to-end sanity: the streaming benchmark at toy scale
 bench-smoke:
@@ -13,6 +25,10 @@ bench-smoke:
 	from benchmarks import bench_stream; \
 	r = bench_stream.run(n_nodes=512, batch_size=128, n_batches=6); \
 	assert r['steady_compiles'] == 0, r"
+
+# candidate-pruning parity + zero-recompile sanity at toy scale
+bench-prune-smoke:
+	$(PY) benchmarks/bench_prune.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

@@ -6,6 +6,7 @@
   bench_kernels  — Pallas segsum micro-validation + XLA path timing
   bench_roofline — three-term roofline from the dry-run artifact
   bench_stream   — streaming subsystem: ingest rate + query vs recompute
+  bench_prune    — candidate pruning: pruned vs unpruned query latency
 """
 from __future__ import annotations
 
@@ -14,7 +15,8 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_density, bench_epsilon, bench_kernels,
-                            bench_roofline, bench_scaling, bench_stream)
+                            bench_prune, bench_roofline, bench_scaling,
+                            bench_stream)
     for name, fn in [
         ("bench_density (paper Table 3)", bench_density.main),
         ("bench_epsilon (paper Table 2)", bench_epsilon.run),
@@ -22,6 +24,7 @@ def main() -> None:
         ("bench_kernels", bench_kernels.run),
         ("bench_roofline (single-pod)", bench_roofline.run),
         ("bench_stream (dynamic graphs)", bench_stream.main),
+        ("bench_prune (candidate pruning)", bench_prune.main),
     ]:
         print(f"\n=== {name} ===")
         t0 = time.time()

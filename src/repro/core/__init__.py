@@ -1,13 +1,17 @@
 # The paper's primary contribution: parallel densest-subgraph discovery.
 # P-Bahmani (Alg. 1) + CBDS-P (Alg. 2) in TPU-native JAX, plus the exact
 # (Goldberg flow) and serial greedy (Charikar) baselines the paper evaluates
-# against, and the multi-pod shard_map engine (distributed.py).
+# against, the multi-pod shard_map engine (distributed.py), and the
+# exactness-preserving candidate-pruning subsystem (prune.py).
 from repro.core.cbds import cbds_np, cbds_p
 from repro.core.charikar import charikar, degeneracy_order
 from repro.core.density import check_approx_bound, subgraph_density
 from repro.core.exact import exact_densest
 from repro.core.kcore import kcore_decompose, kcore_np
 from repro.core.pbahmani import pbahmani, pbahmani_np, pbahmani_pass
+from repro.core.prune import (
+    PrunePlan, build_plan, pbahmani_pruned, plan_for_graph,
+)
 
 __all__ = [
     "cbds_np",
@@ -22,4 +26,8 @@ __all__ = [
     "pbahmani",
     "pbahmani_np",
     "pbahmani_pass",
+    "PrunePlan",
+    "build_plan",
+    "pbahmani_pruned",
+    "plan_for_graph",
 ]

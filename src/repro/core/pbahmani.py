@@ -133,11 +133,25 @@ def _pbahmani_jit(
     return jax.lax.while_loop(cond, body, state)
 
 
-def pbahmani(graph: Graph, eps: float = 0.0) -> tuple[float, np.ndarray, int]:
+def pbahmani(
+    graph: Graph, eps: float = 0.0, pruned: bool = False
+) -> tuple[float, np.ndarray, int]:
     """Run P-Bahmani. Returns (best_density, best_mask, passes).
 
     Guarantee (Bahmani et al. 2012): best_density >= rho*(G) / (2 + 2·eps).
+
+    ``pruned=True`` routes through the candidate-pruning subsystem
+    (core/prune.py): the peel continues inside a compacted pow-2 subproblem
+    once the live set fits, returning the bit-identical triple at a fraction
+    of the lane work (the exactness invariant proven in prune.py and
+    asserted in tests/test_prune.py).
     """
+    if graph.n_nodes == 0:
+        return 0.0, np.zeros(0, dtype=bool), 0
+    if pruned:
+        from repro.core.prune import pbahmani_pruned
+
+        return pbahmani_pruned(graph, eps=eps)
     src = jnp.asarray(graph.src)
     dst = jnp.asarray(graph.dst)
     final = _pbahmani_jit(src, dst, graph.n_nodes, jnp.asarray(graph.n_edges, jnp.int32), float(eps))

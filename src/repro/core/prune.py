@@ -1,0 +1,551 @@
+"""Candidate pruning: exactness-preserving compacted peel (ISSUE 2 tentpole).
+
+Every ``pbahmani`` pass sweeps the full padded edge arrays, but the live set
+shrinks geometrically (a 4k-node power-law graph drops 4096 -> 1091 -> 275
+live vertices in two passes) — so almost all lanes of almost all passes are
+dead weight. This module peels a *compacted fixed-shape subproblem* instead:
+
+  1. a density lower bound rho~ is bootstrapped on the current graph
+     (Bahmani-style: the live graph's own density, the previous epoch's best
+     mask re-evaluated on the current edges, and the densities of the
+     iterated ceil(rho~)-cores — every candidate is an achieved subgraph
+     density, hence a sound lower bound on rho*);
+  2. the existing k-core machinery (``kcore._level_fixpoint``) runs to the
+     ceil(rho~)-core (Sukprasert et al., arXiv:2311.04333), yielding the
+     candidate set whose size/fraction the engine reports as pruning stats
+     (bucket sizing itself tracks the *observed* pass-0 handoff — the core
+     bounds where the trajectory's dense tail lives, but the handoff set is
+     what must physically fit); the analysis runs at epoch cadence only,
+     amortized against the refresh's cold peel;
+  3. the peel's pass-0 survivor set is computed from the maintained degree
+     array (vertex-width only), its induced edges are compacted *on the
+     host* — the edge buffer's undirected slot arrays already live there —
+     into a pow-2 bucket (remapped COO + order-preserving vertex index map),
+     and the peel runs entirely inside the bucket, with a second,
+     bucket-width compaction ladder for the late tail of the trajectory.
+
+Host-side compaction is a deliberate inversion of the device-resident
+ingest path: a query must materialize a result on the host anyway, the
+degree pull is |V| int32 (16KB at 4k nodes), and filtering ~|E| host slots
+costs microseconds in numpy — while a device-side stream compaction costs a
+full-width cumsum + scatter, which profiling puts at ~1.5x the price of an
+entire peel pass. With the host doing the remap, the device executes *zero*
+full-lane-width operations on the pruned query path, and the host knows the
+exact subproblem size before dispatch, so a bucket fit-miss re-sizes the
+plan instead of wasting a query.
+
+Exactness-preservation invariant
+--------------------------------
+The pruned peel returns the *bit-identical* (density, mask, passes) triple
+of the unpruned cold peel. Proof sketch:
+
+  * Pass 0 is simulated exactly: ``failed0 = active & (deg <= thr0)`` uses
+    the same int32 degrees and the same float32 threshold
+    ``2(1+eps)·|E|/|V|`` (host numpy float32 replicates the jitted scalar
+    arithmetic operation for operation); the survivor count and surviving
+    edge count are exact integers.
+  * A peel pass depends only on the *induced* live subgraph plus the scalar
+    state (n_v, n_e, best, passes). Compaction is an order-preserving
+    relabeling of the live vertices and their induced edges, so every
+    integer the recurrence reads is unchanged; ``segment_sum`` over int32
+    is exact under lane reordering, and every float32 scalar (rho,
+    threshold, best comparisons) is computed from identical integers —
+    hence bit-identical, pass for pass.
+  * Best tracking uses the same strict ``>`` at every merge point (host
+    merge of the pass-0/1 states, ladder merge inside the bucket), so the
+    earliest argmax state wins exactly as in the unpruned trajectory.
+
+Note rho~ itself never gates correctness: it drives the candidate metrics
+and bucket reuse. A naive "re-peel the ceil(rho~)-core from its own
+density" does NOT preserve the peel output (the core is denser, so the
+threshold schedule — and hence the trajectory — diverges on >50% of random
+graphs). Exactness comes from preserving the trajectory, not from core
+containment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.density import degrees_from_coo, subgraph_density
+from repro.core.kcore import CoreState, _level_fixpoint
+from repro.core.pbahmani import PeelState, pbahmani_pass
+from repro.graphs.graph import Graph
+from repro.utils.num import next_pow2
+
+MIN_BUCKET_V = 64     # smallest compacted vertex space (pow-2 buckets above)
+MIN_BUCKET_E = 256    # smallest compacted lane count
+LADDER_RATIO = 8      # second-level bucket = first-level bucket / ratio
+BUCKET_SLACK = 1.5    # headroom over the observed handoff size
+
+
+@dataclass(frozen=True)
+class PrunePlan:
+    """Per-tenant pruning decision, rebuilt at epoch cadence.
+
+    rho_lb / k / candidate counts come from the iterated ceil(rho~)-core;
+    buckets are the static shapes the pruned executable is compiled for.
+    """
+
+    rho_lb: float            # sound lower bound on rho* (achieved density)
+    k: int                   # prune level: candidates = ceil(rho_lb)-core
+    n_candidates: int        # |ceil(rho_lb)-core|
+    n_candidate_edges: int   # |E(core)|
+    candidate_fraction: float  # |core| / graph vertex count (not padding)
+    bucket_v: int            # compacted vertex-space size (pow-2)
+    bucket_e: int            # compacted lane count (pow-2, holds 2|E| lanes)
+    bucket_v2: int           # second-level ladder bucket
+    bucket_e2: int
+    enabled: bool
+    node_width: int = 0      # sizing basis, kept for in-flight regrow
+    lane_width: int = 0
+    n_vertices: int = 0      # candidate_fraction denominator
+
+    @property
+    def buckets(self) -> tuple[int, int, int, int]:
+        return (self.bucket_v, self.bucket_e, self.bucket_v2, self.bucket_e2)
+
+
+# ---------------------------------------------------------------------------
+# rho~ bootstrap + candidate core (plan analysis)
+# ---------------------------------------------------------------------------
+def _ceil_level(rho: jax.Array) -> jax.Array:
+    return jnp.maximum(jnp.ceil(rho).astype(jnp.int32), 1)
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _plan_jit(
+    src: jax.Array,
+    dst: jax.Array,
+    prev_mask: jax.Array,
+    n_edges: jax.Array,
+    n_nodes: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Bootstrap rho~ and shrink to the ceil(rho~)-core.
+
+    Returns (rho_lb, k, candidate_mask, n_candidates, n_candidate_edges).
+    rho_lb only ever takes values of densities achieved by actual subgraphs
+    of the *current* graph (live graph, re-validated previous mask, iterated
+    cores), so rho_lb <= rho* always — the pruning-safety condition.
+    """
+    deg = degrees_from_coo(src, n_nodes)
+    active = deg > 0
+    n_v = jnp.sum(active.astype(jnp.int32))
+    n_e = n_edges.astype(jnp.int32)
+    rho0 = n_e.astype(jnp.float32) / jnp.maximum(n_v, 1).astype(jnp.float32)
+    # previous epoch's best mask, re-evaluated on the current edges: a sound
+    # warm start for rho~ even after deletions (it is a *current* subgraph)
+    warm_rho = subgraph_density(src, dst, prev_mask, n_nodes)
+    rho_lb = jnp.maximum(rho0, warm_rho)
+
+    state = CoreState(
+        k=jnp.asarray(-1, jnp.int32),  # level already completed (none)
+        deg=deg.astype(jnp.int32),
+        active=active,
+        coreness=jnp.zeros(n_nodes, dtype=jnp.int32),
+        n_v=n_v,
+        n_e=n_e,
+        best_density=rho_lb,
+        best_k=jnp.asarray(0, jnp.int32),
+        best_n_v=n_v,
+        best_n_e=n_e,
+    )
+
+    def cond(c: CoreState) -> jax.Array:
+        # keep shrinking while the bound justifies a deeper core
+        return (c.n_v > 0) & (c.k < _ceil_level(c.best_density) - 1)
+
+    def body(c: CoreState) -> CoreState:
+        c = c._replace(k=_ceil_level(c.best_density) - 1)
+        c = _level_fixpoint(c, src, dst, n_nodes)  # the existing kcore sweep
+        rho_c = jnp.where(
+            c.n_v > 0,
+            c.n_e.astype(jnp.float32) / jnp.maximum(c.n_v, 1).astype(jnp.float32),
+            0.0,
+        )
+        return c._replace(best_density=jnp.maximum(c.best_density, rho_c))
+
+    final = jax.lax.while_loop(cond, body, state)
+    return final.best_density, final.k + 1, final.active, final.n_v, final.n_e
+
+
+def build_plan(
+    rho_lb: float,
+    k: int,
+    n_candidates: int,
+    n_candidate_edges: int,
+    node_width: int,
+    lane_width: int,
+    observed: tuple[int, int] | None = None,
+    n_vertices: int | None = None,
+) -> PrunePlan:
+    """Size the compaction buckets for a (node_width, lane_width) graph.
+
+    ``observed`` is the previous epoch's handoff (survivor count, live
+    lanes); buckets track it with ``BUCKET_SLACK`` headroom so steady-state
+    queries reuse one compiled executable. The vertex bucket may reach the
+    full (pow-2) vertex space — vertex-width ops are cheap; the latency win
+    is in the lane bucket, which must stay strictly below the full lane
+    width for pruning to pay off.
+    """
+    cap_v = max(next_pow2(node_width), MIN_BUCKET_V)
+    cap_e = max(next_pow2(lane_width) // 2, MIN_BUCKET_E)
+    if observed is not None:
+        h_nv, h_lanes = observed
+        bv = next_pow2(max(int(h_nv * BUCKET_SLACK), MIN_BUCKET_V))
+        be = next_pow2(max(int(h_lanes * BUCKET_SLACK), MIN_BUCKET_E))
+    else:
+        bv = max(cap_v // 2, MIN_BUCKET_V)
+        be = cap_e
+    bv = min(bv, cap_v)
+    be = min(be, cap_e)
+    bv2 = max(bv // LADDER_RATIO, MIN_BUCKET_V)
+    be2 = max(be // LADDER_RATIO, MIN_BUCKET_E)
+    enabled = be < lane_width
+    n_vertices = node_width if n_vertices is None else int(n_vertices)
+    return PrunePlan(
+        rho_lb=float(rho_lb),
+        k=int(k),
+        n_candidates=int(n_candidates),
+        n_candidate_edges=int(n_candidate_edges),
+        candidate_fraction=float(n_candidates) / max(n_vertices, 1),
+        bucket_v=int(bv),
+        bucket_e=int(be),
+        bucket_v2=int(min(bv2, bv)),
+        bucket_e2=int(min(be2, be)),
+        enabled=bool(enabled),
+        node_width=int(node_width),
+        lane_width=int(lane_width),
+        n_vertices=n_vertices,
+    )
+
+
+# ---------------------------------------------------------------------------
+# device side: bucket peel with a second-level compaction ladder
+# ---------------------------------------------------------------------------
+def _compact_edges(
+    src: jax.Array,
+    dst: jax.Array,
+    live_v: jax.Array,
+    n_nodes: int,
+    bucket_v: int,
+    bucket_e: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-side remap of the subgraph induced by ``live_v`` into bucket
+    arrays (used for the in-bucket ladder step, where the cumsum is cheap).
+    Returns (perm, bucket_src, bucket_dst)."""
+    src_c = jnp.minimum(src, n_nodes - 1)
+    dst_c = jnp.minimum(dst, n_nodes - 1)
+    valid = (src < n_nodes) & (dst < n_nodes)
+    live = valid & live_v[src_c] & live_v[dst_c]
+    live_i = live.astype(jnp.int32)
+    perm = jnp.cumsum(live_v.astype(jnp.int32)) - 1
+    pos = jnp.where(live, jnp.cumsum(live_i) - 1, bucket_e)
+    b_src = jnp.full(bucket_e, bucket_v, jnp.int32).at[pos].set(
+        perm[src_c].astype(jnp.int32), mode="drop"
+    )
+    b_dst = jnp.full(bucket_e, bucket_v, jnp.int32).at[pos].set(
+        perm[dst_c].astype(jnp.int32), mode="drop"
+    )
+    return perm, b_src, b_dst
+
+
+def _peel_to_end(
+    state: PeelState, src: jax.Array, dst: jax.Array, n_nodes: int, eps: float
+) -> PeelState:
+    return jax.lax.while_loop(
+        lambda s: s.n_v > 0,
+        lambda s: pbahmani_pass(s, src, dst, n_nodes, eps),
+        state,
+    )
+
+
+def _staged_peel(
+    state: PeelState,
+    src: jax.Array,
+    dst: jax.Array,
+    n_nodes: int,
+    eps: float,
+    bucket_v: int,
+    bucket_e: int,
+) -> PeelState:
+    """Peel at the current width until the live set fits (bucket_v,
+    bucket_e), compact, and finish inside the smaller bucket. The returned
+    state is in the *current* (n_nodes-wide) space; bit-identical to
+    ``_peel_to_end`` on the same input by the invariant in the module
+    docstring."""
+
+    def unfits(s: PeelState) -> jax.Array:
+        return (s.n_v > 0) & ((s.n_v > bucket_v) | (2 * s.n_e > bucket_e))
+
+    s1 = jax.lax.while_loop(
+        unfits, lambda s: pbahmani_pass(s, src, dst, n_nodes, eps), state
+    )
+    perm, b_src, b_dst = _compact_edges(
+        src, dst, s1.active, n_nodes, bucket_v, bucket_e
+    )
+    vslot = jnp.where(s1.active, perm, bucket_v)
+    b_deg = jnp.zeros(bucket_v, jnp.int32).at[vslot].set(s1.deg, mode="drop")
+    b_active = jnp.zeros(bucket_v, bool).at[vslot].set(True, mode="drop")
+    s2 = _peel_to_end(
+        PeelState(
+            deg=b_deg,
+            active=b_active,
+            n_v=s1.n_v,
+            n_e=s1.n_e,
+            best_density=s1.best_density,
+            best_mask=jnp.zeros(bucket_v, dtype=bool),
+            passes=s1.passes,
+        ),
+        b_src, b_dst, bucket_v, eps,
+    )
+    improved = s2.best_density > s1.best_density
+    mask_back = s1.active & s2.best_mask[jnp.minimum(perm, bucket_v - 1)]
+    # the peel runs to an empty live set, so the terminal deg/active are
+    # identically zero — return them as such (what _peel_to_end would hold)
+    return s1._replace(
+        deg=jnp.zeros_like(s1.deg),
+        active=jnp.zeros_like(s1.active),
+        best_density=s2.best_density,
+        best_mask=jnp.where(improved, mask_back, s1.best_mask),
+        passes=s2.passes,
+        n_v=s2.n_v,
+        n_e=s2.n_e,
+    )
+
+
+@partial(jax.jit, static_argnames=(
+    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2"))
+def _bucket_peel_jit(
+    b_src: jax.Array,
+    b_dst: jax.Array,
+    n_v: jax.Array,
+    n_e: jax.Array,
+    best_density: jax.Array,
+    passes: jax.Array,
+    eps: float,
+    bucket_v: int,
+    bucket_e: int,
+    bucket_v2: int,
+    bucket_e2: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Peel the compacted subproblem to completion (with the ladder).
+
+    The host compaction emits compact ids as a dense prefix, so the live
+    mask is ``arange < n_v`` and degrees are one bucket-width histogram —
+    no full-lane-width work happens on device at all.
+    """
+    b_deg = degrees_from_coo(b_src, bucket_v)
+    b_active = jnp.arange(bucket_v, dtype=jnp.int32) < n_v
+    final = _staged_peel(
+        PeelState(
+            deg=b_deg,
+            active=b_active,
+            n_v=n_v.astype(jnp.int32),
+            n_e=n_e.astype(jnp.int32),
+            best_density=best_density.astype(jnp.float32),
+            best_mask=jnp.zeros(bucket_v, dtype=bool),
+            passes=passes.astype(jnp.int32),
+        ),
+        b_src, b_dst, bucket_v, eps, bucket_v2, bucket_e2,
+    )
+    return final.best_density, final.best_mask, final.passes
+
+
+# ---------------------------------------------------------------------------
+# host side: pass-0 simulation, compaction, and state merge
+# ---------------------------------------------------------------------------
+def _pass0_host(
+    deg: np.ndarray, n_edges: int, eps: float
+) -> tuple[np.ndarray, np.ndarray, int, np.float32]:
+    """Replicate the peel's pass 0 in host float32: same ints, same f32
+    threshold arithmetic as ``pbahmani_pass`` / ``peel_threshold``.
+    Returns (active0, survivors, n_v0, rho0)."""
+    active0 = deg > 0
+    n_v0 = int(active0.sum())
+    rho0 = np.float32(n_edges) / np.float32(max(n_v0, 1))
+    thr0 = np.float32(2.0 * (1.0 + eps)) * rho0
+    failed0 = active0 & (deg.astype(np.float32) <= thr0)
+    return active0, active0 & ~failed0, n_v0, rho0
+
+
+def _induced_slots(u: np.ndarray, v: np.ndarray, live_v: np.ndarray) -> np.ndarray:
+    """Indices of undirected slots whose endpoints both survive ``live_v``
+    (sentinel slots are dropped via the appended always-False row)."""
+    lv = np.concatenate([live_v, np.zeros(1, dtype=bool)])
+    return np.flatnonzero(lv[u] & lv[v])
+
+
+def _emit_buckets(
+    u: np.ndarray,
+    v: np.ndarray,
+    idx: np.ndarray,
+    live_v: np.ndarray,
+    bucket_v: int,
+    bucket_e: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Remap the slots ``idx`` into sentinel(=bucket_v)-padded symmetric COO
+    bucket arrays. Returns (perm, bucket_src, bucket_dst)."""
+    k = idx.size
+    if 2 * k > bucket_e or int(live_v.sum()) > bucket_v:
+        raise ValueError("subproblem does not fit the requested buckets")
+    perm = np.cumsum(live_v.astype(np.int64)) - 1
+    bu = perm[u[idx]].astype(np.int32)
+    bv_ = perm[v[idx]].astype(np.int32)
+    b_src = np.full(bucket_e, bucket_v, np.int32)
+    b_dst = np.full(bucket_e, bucket_v, np.int32)
+    b_src[:k] = bu
+    b_src[k:2 * k] = bv_
+    b_dst[:k] = bv_
+    b_dst[k:2 * k] = bu
+    return perm, b_src, b_dst
+
+
+def compact_candidates(
+    u: np.ndarray,
+    v: np.ndarray,
+    live_v: np.ndarray,
+    bucket_v: int,
+    bucket_e: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Host-side fused compaction of the undirected slot arrays ``u, v``
+    (sentinel-padded, sentinel == len(live_v)) to the subgraph induced by
+    ``live_v``. Returns (perm, bucket_src, bucket_dst, live_lanes) with the
+    bucket arrays in symmetric COO, sentinel(=bucket_v)-padded; ``perm`` is
+    the order-preserving vertex index map (full id -> compact id, valid
+    where ``live_v``)."""
+    idx = _induced_slots(u, v, live_v)
+    perm, b_src, b_dst = _emit_buckets(u, v, idx, live_v, bucket_v, bucket_e)
+    return perm, b_src, b_dst, 2 * idx.size
+
+
+def pruned_peel_host(
+    u: np.ndarray,
+    v: np.ndarray,
+    deg: np.ndarray,
+    n_edges: int,
+    eps: float,
+    plan: PrunePlan,
+) -> tuple[float, np.ndarray, int, tuple[int, int], PrunePlan] | None:
+    """The full pruned query: host pass-0 + compaction, device bucket peel,
+    host merge. ``u, v`` are undirected host slot arrays (sentinel-padded),
+    ``deg`` the exact int32 degree array (len == vertex space == sentinel).
+
+    Returns (density, mask, passes, observed_handoff, plan) — ``plan`` may
+    have grown if the observed survivor set missed the given buckets (the
+    host sees the exact size before dispatch, so no query is ever wasted;
+    bit-identity holds for every bucket choice). Returns ``None`` when the
+    survivor set cannot fit any legal bucket (pruning would not pay off);
+    the caller runs its unpruned path.
+    """
+    n_nodes = deg.shape[0]
+    active0, a1, n_v0, rho0 = _pass0_host(deg, n_edges, eps)
+    if n_v0 == 0:
+        return float(rho0), active0, 0, (0, 0), plan
+    n_v1 = int(a1.sum())
+    idx = _induced_slots(u, v, a1)
+    lanes1 = 2 * idx.size
+    if n_v1 > plan.bucket_v or lanes1 > plan.bucket_e:
+        # regrow to the observed size (pow-2 + slack) on the plan's own
+        # sizing basis; the host knows the exact subproblem size before
+        # dispatch, so no query is wasted
+        plan = build_plan(
+            plan.rho_lb, plan.k, plan.n_candidates, plan.n_candidate_edges,
+            node_width=plan.node_width or n_nodes,
+            lane_width=plan.lane_width or u.shape[0] * 2,
+            observed=(n_v1, lanes1), n_vertices=plan.n_vertices or None,
+        )
+        if (not plan.enabled or n_v1 > plan.bucket_v
+                or lanes1 > plan.bucket_e):
+            return None
+    perm, b_src, b_dst = _emit_buckets(u, v, idx, a1, plan.bucket_v,
+                                       plan.bucket_e)
+    n_e1 = lanes1 // 2
+    rho1 = (np.float32(n_e1) / np.float32(max(n_v1, 1))
+            if n_v1 > 0 else np.float32(0.0))
+    better1 = bool(rho1 > rho0)
+    best_d1 = rho1 if better1 else rho0
+
+    d_b, mask_b, passes_b = _bucket_peel_jit(
+        jnp.asarray(b_src), jnp.asarray(b_dst),
+        jnp.asarray(n_v1, jnp.int32), jnp.asarray(n_e1, jnp.int32),
+        jnp.asarray(best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
+        float(eps), *plan.buckets,
+    )
+    density = np.float32(d_b)
+    passes = int(passes_b)
+    if density > best_d1:  # strict >: earliest best wins, as unpruned
+        mask_b = np.asarray(mask_b)
+        mask = a1 & mask_b[np.minimum(perm, plan.bucket_v - 1)]
+    else:
+        mask = a1 if better1 else active0
+    return float(density), mask, passes, (n_v1, lanes1), plan
+
+
+def plan_for_graph(
+    graph: Graph, prev_mask: np.ndarray | None = None,
+    observed: tuple[int, int] | None = None,
+) -> PrunePlan:
+    """Analyze a static graph: rho~ bootstrap + candidate core + buckets."""
+    n = graph.n_nodes
+    if n == 0 or graph.n_edges == 0:
+        return build_plan(0.0, 1, 0, 0, max(n, 1), max(graph.src.shape[0], 1))
+    pm = (jnp.zeros(n, dtype=bool) if prev_mask is None
+          else jnp.asarray(prev_mask, dtype=bool))
+    rho_lb, k, _, n_cand, ne_cand = _plan_jit(
+        jnp.asarray(graph.src), jnp.asarray(graph.dst), pm,
+        jnp.asarray(graph.n_edges, jnp.int32), n,
+    )
+    return build_plan(
+        float(rho_lb), int(k), int(n_cand), int(ne_cand),
+        node_width=n, lane_width=graph.src.shape[0], observed=observed,
+        n_vertices=n,
+    )
+
+
+def pbahmani_pruned(
+    graph: Graph, eps: float = 0.0, plan: PrunePlan | None = None
+) -> tuple[float, np.ndarray, int]:
+    """Candidate-pruned P-Bahmani: bit-identical to ``pbahmani(graph, eps)``
+    (density, mask AND pass count), at bucket-width device cost."""
+    if plan is None:
+        plan = plan_for_graph(graph)
+    if not plan.enabled or graph.n_nodes == 0:
+        from repro.core.pbahmani import pbahmani
+
+        return pbahmani(graph, eps=eps)
+    half = graph.n_directed // 2
+    # undirected slot view, one sentinel pad slot so empty graphs stay valid
+    u = np.concatenate([
+        graph.src[:half].astype(np.int64),
+        np.asarray([graph.n_nodes], np.int64),
+    ])
+    v = np.concatenate([
+        graph.dst[:half].astype(np.int64),
+        np.asarray([graph.n_nodes], np.int64),
+    ])
+    res = pruned_peel_host(
+        u, v, graph.degrees().astype(np.int32), graph.n_edges, float(eps), plan
+    )
+    if res is None:
+        from repro.core.pbahmani import pbahmani
+
+        return pbahmani(graph, eps=eps)
+    density, mask, passes, _, _ = res
+    return float(density), mask, passes
+
+
+__all__ = [
+    "PrunePlan",
+    "build_plan",
+    "plan_for_graph",
+    "compact_candidates",
+    "pruned_peel_host",
+    "pbahmani_pruned",
+    "MIN_BUCKET_V",
+    "MIN_BUCKET_E",
+]

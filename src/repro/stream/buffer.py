@@ -25,12 +25,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.graphs.graph import Graph
+from repro.utils.num import next_pow2
 
 MIN_CAPACITY = 256  # matches Graph.from_edges pad_multiple: shared jit shapes
-
-
-def next_pow2(x: int) -> int:
-    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
 
 
 class EdgeBuffer:
@@ -146,6 +143,12 @@ class EdgeBuffer:
         self.generation += 1
 
     # -- views --------------------------------------------------------------
+    def host_view(self) -> tuple[np.ndarray, np.ndarray]:
+        """(u, v) undirected slot arrays, shape [capacity], sentinel-padded
+        — the zero-copy host input for candidate compaction (core/prune.py).
+        Callers must treat the arrays as read-only."""
+        return self._u, self._v
+
     def device_view(self) -> tuple[np.ndarray, np.ndarray]:
         """(src, dst) symmetric COO, shape [2 * capacity], sentinel-padded —
         drop-in for the ``Graph.src``/``Graph.dst`` convention. Holes carry

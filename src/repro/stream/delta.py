@@ -27,15 +27,33 @@ perturbing the oracle-exact ``density``.
 Shape discipline: batches are padded to power-of-two lengths and edge
 arrays only double (buffer.py), so a long stream of same-capacity batches
 compiles each executable once (compile-count assertion in tests). A
-staleness counter triggers an *epoch refresh* every ``refresh_every``
-batches: the buffer compacts its slots, device state is rebuilt, and the
-query runs through the existing ``_pbahmani_jit`` path — this bounds
-slot-fragmentation drift and re-anchors the maintained state.
+staleness counter triggers an *epoch refresh* when the accumulated weight
+reaches ``refresh_every``: the buffer compacts its slots, device state is
+rebuilt, and the query re-anchors through a cold peel. Batches weigh
+``1 + DELETE_STALENESS_WEIGHT · deleted_fraction`` — insert-only streams
+keep the historical cadence (weight exactly 1 per batch) while
+delete-dominated streams, whose tombstone holes fragment the slot space
+fastest, refresh proportionally earlier.
+
+Candidate pruning (ISSUE 2): with ``pruned=True`` (the default) queries run
+through ``core/prune.py`` — warm-start beyond seeding. At epoch cadence the
+engine rebuilds a :class:`~repro.core.prune.PrunePlan`: the previous
+epoch's best mask is re-evaluated on the current edges to bootstrap the
+density lower bound rho~, the existing k-core fixpoint shrinks to the
+ceil(rho~)-core (candidate fraction reported in metrics), and the plan's
+pow-2 buckets size the compacted subproblem that ``pbahmani`` peels instead
+of the full padded arrays. The invariant is *bit-identical density and
+mask* (and pass count) versus the unpruned cold peel — see prune.py for
+the proof sketch and tests/test_prune.py for the adversarial cases. In
+pruned mode ``warm_density``/``warm_mask`` simply mirror the exact result
+(the prev-mask re-evaluation moved into the plan bootstrap, off the
+per-query hot path).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from dataclasses import replace as dc_replace
 from functools import partial
 
 import jax
@@ -45,9 +63,13 @@ import numpy as np
 from repro.core.cbds import _cbds_jit
 from repro.core.density import induced_edge_count
 from repro.core.pbahmani import PeelState, _pbahmani_jit, pbahmani_pass
+from repro.core.prune import (
+    PrunePlan, _bucket_peel_jit, _plan_jit, build_plan, pruned_peel_host,
+)
 from repro.stream.buffer import EdgeBuffer, MIN_CAPACITY, next_pow2
 
 MIN_BATCH = 64  # smallest padded update-batch shape (pow-2 buckets above)
+DELETE_STALENESS_WEIGHT = 3.0  # an all-delete batch ages the epoch 4x
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
@@ -133,6 +155,7 @@ class QueryResult:
     warm_mask: np.ndarray     # mask achieving ``warm_density``
     refreshed: bool           # this query ran the epoch-refresh path
     latency_ms: float = 0.0
+    pruned: bool = False      # peeled the compacted candidate subproblem
 
 
 @dataclass
@@ -143,6 +166,14 @@ class EngineMetrics:
     update_ms_total: float = 0.0
     query_ms_total: float = 0.0
     shape_buckets: set = field(default_factory=set)
+    # candidate pruning (core/prune.py)
+    n_pruned_queries: int = 0     # queries that peeled inside the buckets
+    n_prune_fallbacks: int = 0    # bucket fit-misses (full-width branch)
+    n_plan_builds: int = 0        # rho~ bootstrap + core fixpoint runs
+    bucket_reuses: int = 0        # plan rebuilds that kept the same buckets
+    candidate_fraction: float = 0.0  # |ceil(rho~)-core| / n_nodes
+    prune_bucket_v: int = 0
+    prune_bucket_e: int = 0
 
 
 class DeltaEngine:
@@ -154,6 +185,7 @@ class DeltaEngine:
         eps: float = 0.0,
         capacity: int = MIN_CAPACITY,
         refresh_every: int = 32,
+        pruned: bool = True,
     ):
         if n_nodes <= 0:
             raise ValueError("DeltaEngine needs n_nodes >= 1")
@@ -163,6 +195,7 @@ class DeltaEngine:
         self.node_capacity = max(next_pow2(self.n_nodes), 2)
         self.eps = float(eps)
         self.refresh_every = int(refresh_every)
+        self.pruned = bool(pruned)
         self.buffer = EdgeBuffer(self.node_capacity, capacity=capacity)
         self.metrics = EngineMetrics()
         self._src = None          # device int32 [2*capacity], sentinel-padded
@@ -170,7 +203,9 @@ class DeltaEngine:
         self._deg = None          # device int32 [node_capacity]
         self._generation = -1     # buffer generation mirrored on device
         self._prev_mask = jnp.zeros(self.node_capacity, dtype=bool)
-        self._updates_since_refresh = 0
+        self._staleness = 0.0     # delete-weighted batches since last refresh
+        self._plan: PrunePlan | None = None
+        self._last_handoff: tuple[int, int] | None = None
         self._cached_query: QueryResult | None = None
 
     # -- device-state management -------------------------------------------
@@ -212,7 +247,9 @@ class DeltaEngine:
 
         if regrew:
             # capacity doubled: slots moved shape, rebuild device state whole
+            # (and invalidate the prune plan — its lane-width basis is stale)
             self._resync_device()
+            self._plan = None
         else:
             n = ins.shape[0] + dele.shape[0]
             b = max(next_pow2(max(n, 1)), MIN_BATCH)
@@ -247,7 +284,12 @@ class DeltaEngine:
             )
             self.metrics.shape_buckets.add((2 * self.buffer.capacity, b))
 
-        self._updates_since_refresh += 1
+        # staleness ages faster on delete-heavy batches: tombstone holes are
+        # what the epoch compaction exists to clean up (insert-only streams
+        # accumulate exactly 1 per batch — the historical cadence)
+        n_eff = int(ins.shape[0]) + int(dele.shape[0])
+        del_frac = (int(dele.shape[0]) / n_eff) if n_eff else 0.0
+        self._staleness += 1.0 + DELETE_STALENESS_WEIGHT * del_frac
         self._cached_query = None  # graph changed: next query recomputes
         ms = (time.perf_counter() - t0) * 1e3
         self.metrics.n_update_batches += 1
@@ -261,33 +303,99 @@ class DeltaEngine:
             latency_ms=ms,
         )
 
+    # -- candidate pruning (core/prune.py) ----------------------------------
+    def _rebuild_plan(self) -> None:
+        """rho~ bootstrap + ceil(rho~)-core analysis + bucket sizing. The
+        previous epoch's best mask seeds rho~ (re-evaluated on the current
+        edges, so the bound stays sound after deletions); the last observed
+        handoff sizes the buckets with slack, so steady-state epochs keep
+        reusing one compiled executable (``bucket_reuses``)."""
+        rho_lb, k, _, n_cand, ne_cand = _plan_jit(
+            self._src, self._dst, self._prev_mask,
+            jnp.asarray(self.buffer.n_edges, jnp.int32), self.node_capacity,
+        )
+        new = build_plan(
+            float(rho_lb), int(k), int(n_cand), int(ne_cand),
+            node_width=self.node_capacity,
+            lane_width=2 * self.buffer.capacity,
+            observed=self._last_handoff,
+            n_vertices=self.n_nodes,
+        )
+        if self._plan is not None and new.buckets == self._plan.buckets:
+            self.metrics.bucket_reuses += 1
+        self._plan = new
+        self.metrics.n_plan_builds += 1
+        self.metrics.candidate_fraction = new.candidate_fraction
+        self.metrics.prune_bucket_v = new.bucket_v
+        self.metrics.prune_bucket_e = new.bucket_e
+
+    def _run_pruned_peel(self) -> tuple[float, np.ndarray, int] | None:
+        """Host-compacted peel (prune.py): the device only ever touches the
+        plan's buckets; the host filters the buffer's resident slot arrays
+        against the pass-0 survivor set and remaps them. Returns (density,
+        mask[:n_nodes], passes) — bit-identical to the unpruned cold peel —
+        or ``None`` when the survivor set fits no legal bucket (caller runs
+        the full-width path; counted as a prune fallback)."""
+        u, v = self.buffer.host_view()
+        res = pruned_peel_host(
+            u, v, np.asarray(self._deg),
+            self.buffer.n_edges, self.eps, self._plan,
+        )
+        if res is None:
+            # survivor set fits no legal bucket this epoch: stop paying the
+            # host filter per query until the refresh rebuilds the plan
+            self.metrics.n_prune_fallbacks += 1
+            self._plan = dc_replace(self._plan, enabled=False)
+            return None
+        density, mask, passes, observed, plan = res
+        self._last_handoff = observed
+        if plan is not self._plan:  # in-flight bucket regrow (fit-miss)
+            self._plan = plan
+            self.metrics.prune_bucket_v = plan.bucket_v
+            self.metrics.prune_bucket_e = plan.bucket_e
+        self._prev_mask = jnp.asarray(mask)
+        self.metrics.n_pruned_queries += 1
+        return density, mask[: self.n_nodes], passes
+
     # -- queries ------------------------------------------------------------
     @property
     def stale(self) -> bool:
-        return self._updates_since_refresh >= self.refresh_every
+        return self._staleness >= self.refresh_every
 
     def refresh(self) -> QueryResult:
-        """Epoch refresh: compact the buffer, rebuild device state, and run
-        the query through the existing static ``_pbahmani_jit`` path."""
+        """Epoch refresh: compact the buffer, rebuild device state, rebuild
+        the prune plan (warm-started from the previous epoch's density), and
+        re-anchor with a cold peel — compacted when the plan allows."""
         t0 = time.perf_counter()
         self.buffer.epoch_compact()
         self._resync_device()
-        self._updates_since_refresh = 0
-        final = _pbahmani_jit(
-            self._src, self._dst, self.node_capacity,
-            jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps,
-        )
-        self._prev_mask = final.best_mask
-        density = float(final.best_density)
-        mask = np.asarray(final.best_mask)[: self.n_nodes]
+        self._staleness = 0.0
+        out = None
+        if self.pruned:
+            self._rebuild_plan()
+            if self._plan.enabled:
+                out = self._run_pruned_peel()
+        if out is not None:
+            density, mask, passes = out
+            pruned_flag = True
+        else:
+            final = _pbahmani_jit(
+                self._src, self._dst, self.node_capacity,
+                jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps,
+            )
+            self._prev_mask = final.best_mask
+            density = float(final.best_density)
+            mask = np.asarray(final.best_mask)[: self.n_nodes]
+            passes = int(final.passes)
+            pruned_flag = False
         ms = (time.perf_counter() - t0) * 1e3
         self.metrics.n_refreshes += 1
         self.metrics.n_queries += 1
         self.metrics.query_ms_total += ms
         self._cached_query = QueryResult(
-            density=density, mask=mask, passes=int(final.passes),
+            density=density, mask=mask, passes=passes,
             warm_density=density, warm_mask=mask.copy(),
-            refreshed=True, latency_ms=ms,
+            refreshed=True, latency_ms=ms, pruned=pruned_flag,
         )
         return self._cached_query
 
@@ -302,6 +410,21 @@ class DeltaEngine:
         if self.stale:
             return self.refresh()
         t0 = time.perf_counter()
+        if self.pruned:
+            if self._plan is None:
+                self._rebuild_plan()
+            out = self._run_pruned_peel() if self._plan.enabled else None
+            if out is not None:
+                density, mask, passes = out
+                ms = (time.perf_counter() - t0) * 1e3
+                self.metrics.n_queries += 1
+                self.metrics.query_ms_total += ms
+                self._cached_query = QueryResult(
+                    density=density, mask=mask, passes=passes,
+                    warm_density=density, warm_mask=mask.copy(),
+                    refreshed=False, latency_ms=ms, pruned=True,
+                )
+                return self._cached_query
         final, warm_rho = _warm_peel_jit(
             self._src, self._dst, self._deg,
             jnp.asarray(self.buffer.n_edges, jnp.int32),
@@ -358,7 +481,8 @@ class DeltaEngine:
         Class-level: the jit caches are shared by every engine/tenant — that
         sharing is exactly what the registry's capacity bucketing buys."""
         total = 0
-        for fn in (_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit):
+        for fn in (_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit,
+                   _bucket_peel_jit, _plan_jit):
             total += fn._cache_size()
         return total
 
@@ -366,9 +490,10 @@ class DeltaEngine:
         return (
             f"DeltaEngine(|V|={self.n_nodes}/{self.node_capacity}, "
             f"|E|={self.buffer.n_edges}, eps={self.eps}, "
-            f"stale_in={self.refresh_every - self._updates_since_refresh})"
+            f"pruned={self.pruned}, "
+            f"stale_in={self.refresh_every - self._staleness:.1f})"
         )
 
 
 __all__ = ["DeltaEngine", "QueryResult", "UpdateStats", "EngineMetrics",
-           "MIN_BATCH"]
+           "MIN_BATCH", "DELETE_STALENESS_WEIGHT"]

@@ -40,18 +40,30 @@ class TenantStats:
     n_refreshes: int
     update_ms_total: float
     query_ms_total: float
+    # candidate pruning (core/prune.py): the operator-facing view of the
+    # warm-start pipeline — how much of the graph the ceil(rho~)-core keeps,
+    # which compacted buckets queries run in, and whether plan rebuilds keep
+    # hitting the same compiled executables (reuse = healthy steady state)
+    pruned: bool = False
+    n_pruned_queries: int = 0
+    n_prune_fallbacks: int = 0
+    candidate_fraction: float = 0.0
+    prune_bucket_v: int = 0
+    prune_bucket_e: int = 0
+    bucket_reuses: int = 0
 
 
 class GraphRegistry:
     """Name -> DeltaEngine map with capacity bucketing + LRU eviction."""
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
-                 refresh_every: int = 32):
+                 refresh_every: int = 32, pruned: bool = True):
         if max_tenants <= 0:
             raise ValueError("max_tenants must be >= 1")
         self.max_tenants = int(max_tenants)
         self.default_eps = float(eps)
         self.default_refresh_every = int(refresh_every)
+        self.default_pruned = bool(pruned)
         self._engines: OrderedDict[str, DeltaEngine] = OrderedDict()
         self.evictions = 0
 
@@ -63,6 +75,7 @@ class GraphRegistry:
         eps: float | None = None,
         capacity: int = MIN_CAPACITY,
         refresh_every: int | None = None,
+        pruned: bool | None = None,
     ) -> DeltaEngine:
         """Create (or return the existing) engine for ``name``.
 
@@ -87,6 +100,7 @@ class GraphRegistry:
                 self.default_refresh_every if refresh_every is None
                 else int(refresh_every)
             ),
+            pruned=self.default_pruned if pruned is None else bool(pruned),
         )
         self._engines[name] = eng
         self._engines.move_to_end(name)
@@ -131,6 +145,13 @@ class GraphRegistry:
             n_refreshes=m.n_refreshes,
             update_ms_total=m.update_ms_total,
             query_ms_total=m.query_ms_total,
+            pruned=eng.pruned,
+            n_pruned_queries=m.n_pruned_queries,
+            n_prune_fallbacks=m.n_prune_fallbacks,
+            candidate_fraction=m.candidate_fraction,
+            prune_bucket_v=m.prune_bucket_v,
+            prune_bucket_e=m.prune_bucket_e,
+            bucket_reuses=m.bucket_reuses,
         )
 
     def all_stats(self) -> list[TenantStats]:

@@ -50,9 +50,10 @@ class StreamService:
     """Single-process front-end; one registry, many tenants."""
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
-                 refresh_every: int = 32):
+                 refresh_every: int = 32, pruned: bool = True):
         self.registry = GraphRegistry(
-            max_tenants=max_tenants, eps=eps, refresh_every=refresh_every
+            max_tenants=max_tenants, eps=eps, refresh_every=refresh_every,
+            pruned=pruned,
         )
         self.metrics = ServiceMetrics()
 
@@ -77,11 +78,16 @@ class StreamService:
 
     # -- tenant lifecycle ---------------------------------------------------
     def create_tenant(self, tenant: str, n_nodes: int, eps: float | None = None,
-                      capacity: int = MIN_CAPACITY) -> ServiceResponse:
+                      capacity: int = MIN_CAPACITY,
+                      pruned: bool | None = None) -> ServiceResponse:
+        """``pruned=False`` opts a tenant back into the PR-1 warm-mask path,
+        whose warm_density is an anytime lower bound that can exceed the
+        exact density right after deletions (pruned tenants mirror the
+        exact result instead)."""
         t0 = time.perf_counter()
         try:
             eng = self.registry.register(tenant, n_nodes, eps=eps,
-                                         capacity=capacity)
+                                         capacity=capacity, pruned=pruned)
         except (ValueError, KeyError) as e:
             return self._respond("create_tenant", tenant, t0, error=str(e))
         return self._respond(
@@ -111,7 +117,8 @@ class StreamService:
         return self._respond(
             "density", tenant, t0,
             value={"density": q.density, "warm_density": q.warm_density,
-                   "passes": q.passes, "refreshed": q.refreshed},
+                   "passes": q.passes, "refreshed": q.refreshed,
+                   "pruned": q.pruned},
         )
 
     def membership(self, tenant: str, warm: bool = False) -> ServiceResponse:

@@ -1,3 +1,4 @@
+from repro.utils.num import next_pow2
 from repro.utils.timing import Timer, time_fn
 
-__all__ = ["Timer", "time_fn"]
+__all__ = ["Timer", "time_fn", "next_pow2"]

@@ -1,0 +1,132 @@
+"""Cross-algorithm property oracles (ISSUE 2 satellite).
+
+Systematic, generator-driven invariants that every densest-subgraph
+algorithm in the tree must satisfy simultaneously — not point tests:
+
+  (a) self-consistency: the density an algorithm *reports* equals the
+      density recomputed from the vertex mask it *returns*;
+  (b) approximation bounds (paper Definition 3, via ``check_approx_bound``):
+      charikar >= rho*/2 and pbahmani >= rho*/(2(1+eps)) against the exact
+      flow-based optimum;
+  (c) the densest core is a 2-approximation (Tatti 2019): max-core density
+      >= rho*/2;
+  (d) ``exact_densest`` agrees with brute-force subset enumeration on
+      graphs small enough to enumerate (<= 8 vertices).
+
+Randomization goes through tests/_hyp.py, so the suite degrades to
+deterministic seeded examples on a bare interpreter.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import (
+    cbds_p, charikar, check_approx_bound, exact_densest, kcore_decompose,
+    pbahmani, pbahmani_pruned,
+)
+from repro.graphs.generators import erdos_renyi, planted_dense
+from repro.graphs.graph import Graph
+
+
+def _random_graph(seed: int, n: int = 60, p: float = 0.1) -> Graph:
+    return erdos_renyi(n, p, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# (a) reported density == density recomputed from the returned mask
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.1, 0.5]))
+def test_reported_density_matches_mask_all_algorithms(seed, eps):
+    g = _random_graph(seed)
+    if g.n_edges == 0:
+        return
+    rho_pb, mask_pb, _ = pbahmani(g, eps=eps)
+    assert g.subgraph_density(mask_pb) == pytest.approx(rho_pb, rel=1e-6)
+    rho_pr, mask_pr, _ = pbahmani_pruned(g, eps=eps)
+    assert g.subgraph_density(mask_pr) == pytest.approx(rho_pr, rel=1e-6)
+    rho_ch, mask_ch = charikar(g)
+    assert g.subgraph_density(mask_ch) == pytest.approx(rho_ch, abs=1e-9)
+    rho_ex, mask_ex = exact_densest(g)
+    assert g.subgraph_density(mask_ex) == pytest.approx(rho_ex, abs=1e-9)
+    res = cbds_p(g)
+    assert g.subgraph_density(res["member_mask"]) == pytest.approx(
+        res["density"], abs=2e-4)
+    coreness, rho_core, k_star, m_v, m_e = kcore_decompose(g)
+    core_mask = coreness >= k_star
+    assert int(core_mask.sum()) == m_v
+    assert g.subgraph_density(core_mask) == pytest.approx(rho_core, rel=1e-6)
+    assert g.subgraph_density(core_mask) == pytest.approx(
+        m_e / max(m_v, 1), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (b) approximation bounds against the exact optimum (Definition 3)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.1, 0.5]))
+def test_approximation_bounds_definition3(seed, eps):
+    g = _random_graph(seed)
+    if g.n_edges == 0:
+        return
+    rho_star, _ = exact_densest(g)
+    rho_ch, _ = charikar(g)
+    assert check_approx_bound(rho_ch, rho_star, alpha=2.0)
+    rho_pb, _, _ = pbahmani(g, eps=eps)
+    assert check_approx_bound(rho_pb, rho_star, alpha=2.0 * (1.0 + eps))
+    # no algorithm may report more than a valid subgraph can achieve
+    assert rho_ch <= rho_star + 1e-9
+    assert rho_pb <= rho_star + 1e-4
+
+
+def test_bounds_on_planted_instance():
+    g, _, rho_planted = planted_dense(500, 25, seed=3)
+    rho_star, _ = exact_densest(g)
+    assert rho_star >= rho_planted - 1e-9  # optimum dominates the plant
+    rho_pb, _, _ = pbahmani(g, eps=0.05)
+    assert check_approx_bound(rho_pb, rho_star, alpha=2.1)
+
+
+# ---------------------------------------------------------------------------
+# (c) densest-core 2-approximation (Tatti 2019)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_max_core_density_half_optimal(seed):
+    g = _random_graph(seed)
+    if g.n_edges == 0:
+        return
+    rho_star, _ = exact_densest(g)
+    _, rho_core, _, _, _ = kcore_decompose(g)
+    assert check_approx_bound(rho_core, rho_star, alpha=2.0)
+    assert rho_core <= rho_star + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# (d) exact solver vs brute-force enumeration
+# ---------------------------------------------------------------------------
+def _brute_force_densest(g: Graph) -> float:
+    half = g.n_directed // 2
+    s, d = g.src[:half].astype(np.int64), g.dst[:half].astype(np.int64)
+    best = 0.0
+    for bits in range(1, 1 << g.n_nodes):
+        mask = (bits >> np.arange(g.n_nodes)) & 1 == 1
+        nv = int(mask.sum())
+        ne = int((mask[s] & mask[d]).sum())
+        best = max(best, ne / nv)
+    return best
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_exact_matches_brute_force_small(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))  # <= 8 vertices: 255 subsets
+    g = erdos_renyi(n, float(rng.uniform(0.2, 0.9)), seed=seed)
+    rho_star, mask = exact_densest(g)
+    rho_brute = _brute_force_densest(g)
+    assert rho_star == pytest.approx(rho_brute, abs=1e-9)
+    # and the returned mask actually achieves the optimum
+    if g.n_edges:
+        assert g.subgraph_density(mask) == pytest.approx(rho_brute, abs=1e-9)

@@ -200,6 +200,43 @@ def test_engine_query_memoized_until_update():
     assert q2 is not q1               # updates invalidate the cache
 
 
+def test_staleness_weighted_by_deleted_fraction():
+    """ROADMAP follow-up: delete-dominated streams age the epoch faster
+    (tombstone holes are what the compaction cleans up), while insert-only
+    streams keep the historical one-per-batch cadence exactly."""
+    # insert-only: refresh lands on the refresh_every-th batch, as before
+    eng = DeltaEngine(n_nodes=50, refresh_every=4)
+    for i in range(3):
+        eng.apply_updates(insert=np.array([[i, i + 1]]))
+        assert not eng.stale
+    eng.apply_updates(insert=np.array([[10, 11]]))
+    assert eng.stale
+    q = eng.query()
+    assert q.refreshed and not eng.stale
+
+    # delete-dominated: an all-delete batch weighs 1 + DELETE_STALENESS_WEIGHT
+    from repro.stream.delta import DELETE_STALENESS_WEIGHT
+
+    eng2 = DeltaEngine(n_nodes=50, refresh_every=4)
+    eng2.apply_updates(insert=np.array([[i, i + 1] for i in range(8)]))
+    assert not eng2.stale
+    eng2.apply_updates(delete=np.array([[0, 1], [1, 2]]))
+    assert eng2._staleness == pytest.approx(2.0 + DELETE_STALENESS_WEIGHT)
+    assert eng2.stale  # 2 batches instead of 4
+    assert eng2.query().refreshed
+
+    # no-op deletes (absent edges) are dropped: weight stays the insert-only 1
+    eng3 = DeltaEngine(n_nodes=50, refresh_every=4)
+    eng3.apply_updates(insert=np.array([[0, 1]]))
+    eng3.apply_updates(delete=np.array([[30, 31]]))
+    assert eng3._staleness == pytest.approx(2.0)
+    # mixed batch: weight interpolates by the deleted-edge fraction
+    eng3.apply_updates(insert=np.array([[2, 3], [3, 4], [4, 5]]),
+                      delete=np.array([[0, 1]]))
+    assert eng3._staleness == pytest.approx(
+        3.0 + DELETE_STALENESS_WEIGHT * 0.25)
+
+
 def test_engine_epoch_refresh_resyncs():
     rng = np.random.default_rng(11)
     n = 100
