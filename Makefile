@@ -5,9 +5,10 @@ export PYTHONPATH := src
 # algorithm-core test modules: the coverage floor is enforced on these
 COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
-	tests/test_prune.py tests/test_oracle_properties.py
+	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py
 
-.PHONY: test coverage bench-smoke bench-prune-smoke bench deps-dev
+.PHONY: test coverage bench-smoke bench-prune-smoke bench-shard-smoke \
+	bench deps-dev
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +30,11 @@ bench-smoke:
 # candidate-pruning parity + zero-recompile sanity at toy scale
 bench-prune-smoke:
 	$(PY) benchmarks/bench_prune.py --smoke
+
+# sharded==single-device parity on a forced 4-device CPU mesh
+bench-shard-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) benchmarks/bench_shard.py --smoke
 
 bench:
 	$(PY) benchmarks/run.py

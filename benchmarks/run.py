@@ -7,6 +7,7 @@
   bench_roofline — three-term roofline from the dry-run artifact
   bench_stream   — streaming subsystem: ingest rate + query vs recompute
   bench_prune    — candidate pruning: pruned vs unpruned query latency
+  bench_shard    — sharded streaming: shard_map engine vs single-device
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ import time
 def main() -> None:
     from benchmarks import (bench_density, bench_epsilon, bench_kernels,
                             bench_prune, bench_roofline, bench_scaling,
-                            bench_stream)
+                            bench_shard, bench_stream)
     for name, fn in [
         ("bench_density (paper Table 3)", bench_density.main),
         ("bench_epsilon (paper Table 2)", bench_epsilon.run),
@@ -25,6 +26,7 @@ def main() -> None:
         ("bench_roofline (single-pod)", bench_roofline.run),
         ("bench_stream (dynamic graphs)", bench_stream.main),
         ("bench_prune (candidate pruning)", bench_prune.main),
+        ("bench_shard (sharded streaming)", bench_shard.main),
     ]:
         print(f"\n=== {name} ===")
         t0 = time.time()

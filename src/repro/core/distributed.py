@@ -20,7 +20,7 @@ resumes after a simulated failure (tests/test_distributed.py).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache
 from typing import NamedTuple
 
 import jax
@@ -33,10 +33,49 @@ from repro.core.density import peel_threshold
 from repro.graphs.graph import Graph
 from repro.utils.compat import shard_map_compat
 
+# jitted entry points created by the cached sharded factories below (and by
+# the sharded ingest in stream/delta.py and the sharded bucket peel in
+# core/prune.py). DeltaEngine.compile_count() sums their cache sizes so the
+# zero-recompile contract covers the sharded path too.
+SHARDED_JITS: list = []
+
 
 def edge_sharding(mesh) -> NamedSharding:
     """Edges sharded over ALL mesh axes (flat worker pool)."""
     return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    """Fully-replicated placement for |V|-sized state on the same mesh."""
+    return NamedSharding(mesh, P())
+
+
+def mesh_device_count(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def flat_shard_index(mesh) -> jax.Array:
+    """This device's index in the flattened (row-major) mesh — usable only
+    inside a shard_map body. Matches the lane order of ``P(axis_names)``."""
+    idx = jnp.asarray(0, jnp.int32)
+    for name in mesh.axis_names:
+        idx = idx * mesh.shape[name] + jax.lax.axis_index(name).astype(jnp.int32)
+    return idx
+
+
+def validate_stream_mesh(mesh, capacity: int) -> int:
+    """The sharded streaming engine partitions pow-2 slot spaces, so the
+    flat device count must be a power of two that divides every shard
+    target (edge lanes 2*capacity, update batches, prune buckets)."""
+    n_dev = mesh_device_count(mesh)
+    if n_dev & (n_dev - 1):
+        raise ValueError(
+            f"sharded streaming needs a power-of-two device count, got {n_dev}")
+    if n_dev > 2 * capacity:
+        raise ValueError(
+            f"mesh has {n_dev} devices but the buffer exposes only "
+            f"{2 * capacity} edge lanes; raise the edge capacity")
+    return n_dev
 
 
 def shard_edges(graph: Graph, mesh):
@@ -97,6 +136,54 @@ def make_peel_pass(mesh, n_nodes: int, eps: float):
     return shard_map_compat(body, mesh=mesh,
                             in_specs=(state_spec, P(axes), P(axes)),
                             out_specs=state_spec, check_vma=False)
+
+
+@lru_cache(maxsize=None)
+def make_sharded_warm_peel(mesh, n_nodes: int, eps: float):
+    """Cached jitted sharded analog of ``stream.delta._warm_peel_jit``.
+
+    (src, dst, deg, n_edges, prev_mask) -> (final PeelState, warm_rho) with
+    src/dst sharded over the mesh and the |V|-sized state replicated. The
+    peel body is the same integer/f32 recurrence as ``pbahmani_pass`` with
+    the degree scatter realized as psum (exact int32), so the result is
+    bit-identical to the single-device warm peel on any device count —
+    the sharded==single-device parity oracle in tests/test_shard.py.
+    """
+    axes = tuple(mesh.axis_names)
+    peel_pass = make_peel_pass(mesh, n_nodes, eps)
+
+    def warm_count_body(src_l, dst_l, mask):
+        src_c = jnp.minimum(src_l, n_nodes - 1)
+        dst_c = jnp.minimum(dst_l, n_nodes - 1)
+        valid = (src_l < n_nodes) & (dst_l < n_nodes)
+        live = valid & mask[src_c] & mask[dst_c]
+        return jax.lax.psum(jnp.sum(live.astype(jnp.int32)), axes)
+
+    warm_count = shard_map_compat(
+        warm_count_body, mesh=mesh, in_specs=(P(axes), P(axes), P()),
+        out_specs=P(), check_vma=False)
+
+    @jax.jit
+    def run(src, dst, deg, n_edges, prev_mask):
+        active = deg > 0
+        n_v = jnp.sum(active.astype(jnp.int32))
+        n_e = n_edges.astype(jnp.int32)
+        rho0 = n_e.astype(jnp.float32) / jnp.maximum(n_v, 1).astype(jnp.float32)
+        state = PeelState(
+            deg=deg.astype(jnp.int32), active=active, n_v=n_v, n_e=n_e,
+            best_density=rho0, best_mask=active,
+            passes=jnp.asarray(0, jnp.int32))
+        final = jax.lax.while_loop(
+            lambda s: s.n_v > 0, lambda s: peel_pass(s, src, dst), state)
+        warm_e = warm_count(src, dst, prev_mask) // 2
+        warm_v = jnp.sum(prev_mask.astype(jnp.int32))
+        warm_rho = jnp.where(
+            warm_v > 0, warm_e.astype(jnp.float32) / jnp.maximum(warm_v, 1),
+            0.0)
+        return final, warm_rho
+
+    SHARDED_JITS.append(run)
+    return run
 
 
 def pbahmani_distributed(graph: Graph, mesh, eps: float = 0.0,
@@ -248,6 +335,8 @@ def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
     }
 
 
-__all__ = ["edge_sharding", "shard_edges", "make_peel_pass",
+__all__ = ["edge_sharding", "replicated_sharding", "shard_edges",
+           "make_peel_pass", "make_sharded_warm_peel", "mesh_device_count",
+           "flat_shard_index", "validate_stream_mesh", "SHARDED_JITS",
            "pbahmani_distributed", "cbds_distributed", "DistCoreState",
            "make_kcore_level"]

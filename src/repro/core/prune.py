@@ -65,22 +65,32 @@ containment.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.density import degrees_from_coo, subgraph_density
+from repro.core.distributed import (
+    DistCoreState, SHARDED_JITS, edge_sharding, make_kcore_level,
+    make_peel_pass, mesh_device_count,
+)
 from repro.core.kcore import CoreState, _level_fixpoint
 from repro.core.pbahmani import PeelState, pbahmani_pass
 from repro.graphs.graph import Graph
+from repro.utils.compat import shard_map_compat
 from repro.utils.num import next_pow2
 
 MIN_BUCKET_V = 64     # smallest compacted vertex space (pow-2 buckets above)
 MIN_BUCKET_E = 256    # smallest compacted lane count
 LADDER_RATIO = 8      # second-level bucket = first-level bucket / ratio
 BUCKET_SLACK = 1.5    # headroom over the observed handoff size
+# mid-epoch bucket shrink fires only when the freshly-sized buckets are at
+# least this factor below the plan's; with BUCKET_SLACK regrow this leaves a
+# >2.5x swing between shrink and regrow, so oscillating graphs cannot thrash
+BUCKET_SHRINK_HYSTERESIS = 4
 
 
 @dataclass(frozen=True)
@@ -104,6 +114,9 @@ class PrunePlan:
     node_width: int = 0      # sizing basis, kept for in-flight regrow
     lane_width: int = 0
     n_vertices: int = 0      # candidate_fraction denominator
+    from_observed: bool = False  # buckets sized from a real handoff (mid-
+                                 # epoch shrink only trusts observed sizing;
+                                 # first-shot plans adapt at the refresh)
 
     @property
     def buckets(self) -> tuple[int, int, int, int]:
@@ -173,6 +186,85 @@ def _plan_jit(
     return final.best_density, final.k + 1, final.active, final.n_v, final.n_e
 
 
+@lru_cache(maxsize=None)
+def make_sharded_plan(mesh, n_nodes: int):
+    """Cached jitted sharded analog of ``_plan_jit``: the degree histogram,
+    the previous-mask re-evaluation, and every level of the ceil(rho~)-core
+    fixpoint run as per-shard segment-sums with the cross-shard reduction
+    one psum — same integers as the single-device analysis, so the plan
+    (rho_lb, k, candidate counts) is identical on any device count."""
+    axes = tuple(mesh.axis_names)
+
+    def stats_body(src_l, dst_l, mask):
+        deg = jax.ops.segment_sum(
+            jnp.ones_like(src_l, jnp.int32), jnp.minimum(src_l, n_nodes),
+            num_segments=n_nodes + 1)[:n_nodes]
+        deg = jax.lax.psum(deg, axes)
+        src_c = jnp.minimum(src_l, n_nodes - 1)
+        dst_c = jnp.minimum(dst_l, n_nodes - 1)
+        valid = (src_l < n_nodes) & (dst_l < n_nodes)
+        live = valid & mask[src_c] & mask[dst_c]
+        warm_cnt = jax.lax.psum(jnp.sum(live.astype(jnp.int32)), axes)
+        return deg, warm_cnt
+
+    stats = shard_map_compat(
+        stats_body, mesh=mesh, in_specs=(P(axes), P(axes), P()),
+        out_specs=(P(), P()), check_vma=False)
+
+    # the level sweep is exactly the distributed k-core pass (CBDS phase 1);
+    # DistCoreState and kcore.CoreState share the same fields, so the plan
+    # loop can run on make_kcore_level's state directly
+    level = make_kcore_level(mesh, n_nodes)
+
+    @jax.jit
+    def run(src, dst, prev_mask, n_edges):
+        deg, warm_cnt = stats(src, dst, prev_mask)
+        active = deg > 0
+        n_v = jnp.sum(active.astype(jnp.int32))
+        n_e = n_edges.astype(jnp.int32)
+        rho0 = n_e.astype(jnp.float32) / jnp.maximum(n_v, 1).astype(jnp.float32)
+        warm_v = jnp.sum(prev_mask.astype(jnp.int32))
+        warm_e = warm_cnt // 2
+        warm_rho = jnp.where(
+            warm_v > 0, warm_e.astype(jnp.float32) / jnp.maximum(warm_v, 1),
+            0.0)
+        rho_lb = jnp.maximum(rho0, warm_rho)
+        state = DistCoreState(
+            k=jnp.asarray(-1, jnp.int32),
+            deg=deg.astype(jnp.int32),
+            active=active,
+            coreness=jnp.zeros(n_nodes, dtype=jnp.int32),
+            n_v=n_v,
+            n_e=n_e,
+            best_density=rho_lb,
+            best_k=jnp.asarray(0, jnp.int32),
+            best_n_v=n_v,
+            best_n_e=n_e,
+        )
+
+        def cond(c: DistCoreState) -> jax.Array:
+            return (c.n_v > 0) & (c.k < _ceil_level(c.best_density) - 1)
+
+        def body(c: DistCoreState) -> DistCoreState:
+            c = c._replace(k=_ceil_level(c.best_density) - 1)
+            c = jax.lax.while_loop(
+                lambda t: jnp.any(t.active & (t.deg <= t.k)),
+                lambda t: level(t, src, dst), c)
+            rho_c = jnp.where(
+                c.n_v > 0,
+                c.n_e.astype(jnp.float32)
+                / jnp.maximum(c.n_v, 1).astype(jnp.float32),
+                0.0,
+            )
+            return c._replace(best_density=jnp.maximum(c.best_density, rho_c))
+
+        final = jax.lax.while_loop(cond, body, state)
+        return final.best_density, final.k + 1, final.active, final.n_v, final.n_e
+
+    SHARDED_JITS.append(run)
+    return run
+
+
 def build_plan(
     rho_lb: float,
     k: int,
@@ -221,7 +313,39 @@ def build_plan(
         node_width=int(node_width),
         lane_width=int(lane_width),
         n_vertices=n_vertices,
+        from_observed=observed is not None,
     )
+
+
+def maybe_shrink_plan(
+    plan: PrunePlan, n_v1: int, lanes1: int
+) -> PrunePlan | None:
+    """Mid-epoch bucket shrink (ISSUE 3 bugfix: plans only ever *regrew*
+    mid-epoch, so contracting graphs kept peeling inside peak-size buckets
+    until the next refresh). Returns a right-sized plan when the observed
+    handoff fits buckets ``BUCKET_SHRINK_HYSTERESIS``x smaller on either
+    axis, else None. Shrinking only changes static shapes — bit-identity
+    holds for every bucket choice (module docstring).
+
+    First-shot plans (sized conservatively, before any handoff was seen)
+    never shrink mid-epoch: their slack is intentional warmup headroom, and
+    the first refresh right-sizes them anyway — shrinking them on the very
+    next query would recompile on graphs that never contracted."""
+    if not plan.from_observed:
+        return None
+    bv = next_pow2(max(int(n_v1 * BUCKET_SLACK), MIN_BUCKET_V))
+    be = next_pow2(max(int(lanes1 * BUCKET_SLACK), MIN_BUCKET_E))
+    if (bv * BUCKET_SHRINK_HYSTERESIS > plan.bucket_v
+            and be * BUCKET_SHRINK_HYSTERESIS > plan.bucket_e):
+        return None
+    new = build_plan(
+        plan.rho_lb, plan.k, plan.n_candidates, plan.n_candidate_edges,
+        node_width=plan.node_width, lane_width=plan.lane_width,
+        observed=(n_v1, lanes1), n_vertices=plan.n_vertices or None,
+    )
+    if not new.enabled or new.buckets == plan.buckets:
+        return None
+    return new
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +480,95 @@ def _bucket_peel_jit(
     return final.best_density, final.best_mask, final.passes
 
 
+@lru_cache(maxsize=None)
+def _make_sharded_bucket_peel(mesh, eps: float, bucket_v: int, bucket_e: int,
+                              bucket_v2: int, bucket_e2: int):
+    """Cached jitted sharded analog of ``_bucket_peel_jit``: the bucket's
+    edge lanes are partitioned across the mesh, each pass is a
+    ``make_peel_pass`` body (per-shard segment-sum, psum'd scalar state),
+    and the second-level ladder compacts *per shard* — each device packs its
+    own live lanes into a local ``bucket_e2``-lane bucket (safe: the global
+    live lane count is <= bucket_e2 at the switch point, so no shard can
+    overflow). Lane order differs from the single-device ladder but int32
+    segment-sums are order-invariant, so the returned (density, mask,
+    passes) triple is bit-identical to ``_bucket_peel_jit`` on any device
+    count."""
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if bucket_e % n_dev:
+        raise ValueError(
+            f"bucket_e={bucket_e} not divisible by {n_dev} devices")
+    peel1 = make_peel_pass(mesh, bucket_v, eps)
+    peel2 = make_peel_pass(mesh, bucket_v2, eps)
+
+    def deg_body(src_l):
+        d = jax.ops.segment_sum(
+            jnp.ones_like(src_l, jnp.int32), jnp.minimum(src_l, bucket_v),
+            num_segments=bucket_v + 1)[:bucket_v]
+        return jax.lax.psum(d, axes)
+
+    deg_hist = shard_map_compat(deg_body, mesh=mesh, in_specs=(P(axes),),
+                                out_specs=P(), check_vma=False)
+
+    def compact_body(src_l, dst_l, live_v):
+        src_c = jnp.minimum(src_l, bucket_v - 1)
+        dst_c = jnp.minimum(dst_l, bucket_v - 1)
+        valid = (src_l < bucket_v) & (dst_l < bucket_v)
+        live = valid & live_v[src_c] & live_v[dst_c]
+        perm = jnp.cumsum(live_v.astype(jnp.int32)) - 1
+        pos = jnp.where(live, jnp.cumsum(live.astype(jnp.int32)) - 1,
+                        bucket_e2)
+        b_src = jnp.full(bucket_e2, bucket_v2, jnp.int32).at[pos].set(
+            perm[src_c].astype(jnp.int32), mode="drop")
+        b_dst = jnp.full(bucket_e2, bucket_v2, jnp.int32).at[pos].set(
+            perm[dst_c].astype(jnp.int32), mode="drop")
+        return b_src, b_dst
+
+    compact = shard_map_compat(
+        compact_body, mesh=mesh, in_specs=(P(axes), P(axes), P()),
+        out_specs=(P(axes), P(axes)), check_vma=False)
+
+    @jax.jit
+    def run(b_src, b_dst, n_v, n_e, best_density, passes):
+        b_deg = deg_hist(b_src)
+        b_active = jnp.arange(bucket_v, dtype=jnp.int32) < n_v
+        state = PeelState(
+            deg=b_deg,
+            active=b_active,
+            n_v=n_v.astype(jnp.int32),
+            n_e=n_e.astype(jnp.int32),
+            best_density=best_density.astype(jnp.float32),
+            best_mask=jnp.zeros(bucket_v, dtype=bool),
+            passes=passes.astype(jnp.int32),
+        )
+
+        def unfits(s: PeelState) -> jax.Array:
+            return (s.n_v > 0) & ((s.n_v > bucket_v2) | (2 * s.n_e > bucket_e2))
+
+        s1 = jax.lax.while_loop(
+            unfits, lambda s: peel1(s, b_src, b_dst), state)
+        b2_src, b2_dst = compact(b_src, b_dst, s1.active)
+        perm = jnp.cumsum(s1.active.astype(jnp.int32)) - 1
+        vslot = jnp.where(s1.active, perm, bucket_v2)
+        b_deg2 = jnp.zeros(bucket_v2, jnp.int32).at[vslot].set(
+            s1.deg, mode="drop")
+        b_act2 = jnp.zeros(bucket_v2, bool).at[vslot].set(True, mode="drop")
+        s2 = jax.lax.while_loop(
+            lambda s: s.n_v > 0, lambda s: peel2(s, b2_src, b2_dst),
+            PeelState(
+                deg=b_deg2, active=b_act2, n_v=s1.n_v, n_e=s1.n_e,
+                best_density=s1.best_density,
+                best_mask=jnp.zeros(bucket_v2, dtype=bool),
+                passes=s1.passes))
+        improved = s2.best_density > s1.best_density
+        mask_back = s1.active & s2.best_mask[jnp.minimum(perm, bucket_v2 - 1)]
+        best_mask = jnp.where(improved, mask_back, s1.best_mask)
+        return s2.best_density, best_mask, s2.passes
+
+    SHARDED_JITS.append(run)
+    return run
+
+
 # ---------------------------------------------------------------------------
 # host side: pass-0 simulation, compaction, and state merge
 # ---------------------------------------------------------------------------
@@ -430,17 +643,23 @@ def pruned_peel_host(
     n_edges: int,
     eps: float,
     plan: PrunePlan,
+    mesh=None,
 ) -> tuple[float, np.ndarray, int, tuple[int, int], PrunePlan] | None:
     """The full pruned query: host pass-0 + compaction, device bucket peel,
     host merge. ``u, v`` are undirected host slot arrays (sentinel-padded),
     ``deg`` the exact int32 degree array (len == vertex space == sentinel).
 
     Returns (density, mask, passes, observed_handoff, plan) — ``plan`` may
-    have grown if the observed survivor set missed the given buckets (the
-    host sees the exact size before dispatch, so no query is ever wasted;
-    bit-identity holds for every bucket choice). Returns ``None`` when the
-    survivor set cannot fit any legal bucket (pruning would not pay off);
-    the caller runs its unpruned path.
+    have grown if the observed survivor set missed the given buckets, or
+    *shrunk* if the graph contracted past the hysteresis (the host sees the
+    exact size before dispatch, so no query is ever wasted; bit-identity
+    holds for every bucket choice). Returns ``None`` when the survivor set
+    cannot fit any legal bucket (pruning would not pay off); the caller
+    runs its unpruned path.
+
+    With ``mesh`` the bucket peel runs sharded: bucket lanes partitioned
+    over the mesh devices via ``_make_sharded_bucket_peel`` — same triple,
+    one tenant's candidate set spanning the mesh.
     """
     n_nodes = deg.shape[0]
     active0, a1, n_v0, rho0 = _pass0_host(deg, n_edges, eps)
@@ -462,6 +681,10 @@ def pruned_peel_host(
         if (not plan.enabled or n_v1 > plan.bucket_v
                 or lanes1 > plan.bucket_e):
             return None
+    else:
+        shrunk = maybe_shrink_plan(plan, n_v1, lanes1)
+        if shrunk is not None:
+            plan = shrunk
     perm, b_src, b_dst = _emit_buckets(u, v, idx, a1, plan.bucket_v,
                                        plan.bucket_e)
     n_e1 = lanes1 // 2
@@ -470,12 +693,26 @@ def pruned_peel_host(
     better1 = bool(rho1 > rho0)
     best_d1 = rho1 if better1 else rho0
 
-    d_b, mask_b, passes_b = _bucket_peel_jit(
-        jnp.asarray(b_src), jnp.asarray(b_dst),
-        jnp.asarray(n_v1, jnp.int32), jnp.asarray(n_e1, jnp.int32),
-        jnp.asarray(best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
-        float(eps), *plan.buckets,
-    )
+    if mesh is None:
+        d_b, mask_b, passes_b = _bucket_peel_jit(
+            jnp.asarray(b_src), jnp.asarray(b_dst),
+            jnp.asarray(n_v1, jnp.int32), jnp.asarray(n_e1, jnp.int32),
+            jnp.asarray(best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
+            float(eps), *plan.buckets,
+        )
+    else:
+        if plan.bucket_e % mesh_device_count(mesh):
+            # the candidate set is smaller than one lane per device can
+            # express — pruning cannot pay off on this mesh; fall back to
+            # the (always shardable) full-width path instead of raising
+            return None
+        run = _make_sharded_bucket_peel(mesh, float(eps), *plan.buckets)
+        sh = edge_sharding(mesh)
+        d_b, mask_b, passes_b = run(
+            jax.device_put(b_src, sh), jax.device_put(b_dst, sh),
+            jnp.asarray(n_v1, jnp.int32), jnp.asarray(n_e1, jnp.int32),
+            jnp.asarray(best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
+        )
     density = np.float32(d_b)
     passes = int(passes_b)
     if density > best_d1:  # strict >: earliest best wins, as unpruned
@@ -542,10 +779,13 @@ def pbahmani_pruned(
 __all__ = [
     "PrunePlan",
     "build_plan",
+    "maybe_shrink_plan",
+    "make_sharded_plan",
     "plan_for_graph",
     "compact_candidates",
     "pruned_peel_host",
     "pbahmani_pruned",
     "MIN_BUCKET_V",
     "MIN_BUCKET_E",
+    "BUCKET_SHRINK_HYSTERESIS",
 ]

@@ -12,9 +12,20 @@ shapes — every other batch is a jit cache hit (the "no recompiles on the hot
 path" contract, asserted in tests/test_stream.py).
 
 Deletions punch holes (slot -> sentinel) instead of compacting, keeping
-update cost O(batch); a free-list recycles holes for later insertions. The
-``epoch_compact`` hook rebuilds a dense prefix when the delta engine runs its
-staleness refresh.
+update cost O(batch); freed slots are recycled hole-first for later
+insertions. The ``epoch_compact`` hook rebuilds a dense prefix when the
+delta engine runs its staleness refresh, and with ``shrink=True`` also
+*halves capacity down* to the smallest pow-2 that keeps 2x headroom — the
+ISSUE 3 bugfix for sliding-window/delete-heavy tenants that otherwise kept
+peak-size slot arrays forever. Hysteresis: a shrink fires only when live
+edges occupy <= ``SHRINK_FRACTION`` of capacity, and lands at <= 50%
+occupancy, so an oscillating graph cannot thrash grow/shrink.
+
+Delete-heavy streams also fragment the slot space with tombstones faster
+than any epoch cadence cleans them up; when the un-recycled-hole fraction
+exceeds ``compact_threshold`` the buffer compacts itself mid-stream
+(bumping ``generation`` so resident device state and compiled executables
+re-bucket correctly).
 
 Host-side membership is a dict keyed on the canonical pair (min, max), the
 streaming analog of the paper's "super map": arbitrary update order, O(1)
@@ -28,21 +39,34 @@ from repro.graphs.graph import Graph
 from repro.utils.num import next_pow2
 
 MIN_CAPACITY = 256  # matches Graph.from_edges pad_multiple: shared jit shapes
+SHRINK_FRACTION = 0.25  # epoch shrink only below 25% occupancy (hysteresis)
+TOMBSTONE_COMPACT_FRACTION = 0.5  # default mid-stream compaction trigger
 
 
 class EdgeBuffer:
     """Mutable undirected edge set with a static-shape device view."""
 
-    def __init__(self, n_nodes: int, capacity: int = MIN_CAPACITY):
+    def __init__(self, n_nodes: int, capacity: int = MIN_CAPACITY,
+                 compact_threshold: float | None = TOMBSTONE_COMPACT_FRACTION,
+                 min_capacity: int = MIN_CAPACITY):
         if n_nodes <= 0:
             raise ValueError("EdgeBuffer needs n_nodes >= 1")
-        capacity = max(next_pow2(capacity), MIN_CAPACITY)
+        # min_capacity floors every shrink (and the initial size): sharded
+        # engines raise it so the slot space never drops below one lane
+        # block per mesh device
+        self.min_capacity = max(next_pow2(min_capacity), MIN_CAPACITY)
+        capacity = max(next_pow2(capacity), self.min_capacity)
         self.n_nodes = int(n_nodes)
         self.capacity = capacity
+        self.compact_threshold = compact_threshold
         self._u = np.full(capacity, n_nodes, dtype=np.int32)
         self._v = np.full(capacity, n_nodes, dtype=np.int32)
         self._slot: dict[tuple[int, int], int] = {}
-        self._free: list[int] = list(range(capacity - 1, -1, -1))
+        # never-used slots, popped in ascending order; freed slots (holes)
+        # live separately so fragmentation is observable and holes recycle
+        # first (dense prefixes survive churn longer)
+        self._fresh: list[int] = list(range(capacity - 1, -1, -1))
+        self._holes: list[int] = []
         self.generation = 0  # bumped on every grow/compact (shape/layout epoch)
 
     # -- properties ---------------------------------------------------------
@@ -53,6 +77,11 @@ class EdgeBuffer:
     @property
     def sentinel(self) -> int:
         return self.n_nodes
+
+    @property
+    def tombstone_fraction(self) -> float:
+        """Fraction of the slot space holding un-recycled delete holes."""
+        return len(self._holes) / self.capacity
 
     def __contains__(self, edge: tuple[int, int]) -> bool:
         u, v = int(edge[0]), int(edge[1])
@@ -80,7 +109,12 @@ class EdgeBuffer:
         Deletes are applied first (stream semantics: a batch is a set of
         retractions followed by assertions), so an insert may reuse a slot
         freed by a delete in the same batch. Slot indices let the delta
-        engine patch its device-resident arrays in O(batch)."""
+        engine patch its device-resident arrays in O(batch).
+
+        If the batch leaves the tombstone fraction above
+        ``compact_threshold`` the buffer compacts itself before returning
+        (``generation`` bumps, so callers holding device state must resync —
+        the returned slot indices refer to the pre-compaction layout)."""
         deleted, del_slots = [], []
         if delete is not None:
             for u, v in self._canonicalize(delete):
@@ -89,7 +123,7 @@ class EdgeBuffer:
                     continue
                 self._u[slot] = self.sentinel
                 self._v[slot] = self.sentinel
-                self._free.append(slot)
+                self._holes.append(slot)
                 deleted.append((int(u), int(v)))
                 del_slots.append(slot)
         inserted, ins_slots = [], []
@@ -104,12 +138,15 @@ class EdgeBuffer:
             if len(self._slot) + len(new) > self.capacity:
                 self._grow(next_pow2(len(self._slot) + len(new)))
             for key in new:
-                slot = self._free.pop()
+                slot = self._holes.pop() if self._holes else self._fresh.pop()
                 self._slot[key] = slot
                 self._u[slot] = key[0]
                 self._v[slot] = key[1]
                 inserted.append(key)
                 ins_slots.append(slot)
+        if (self.compact_threshold is not None
+                and len(self._holes) > self.compact_threshold * self.capacity):
+            self.epoch_compact()
         return (
             np.asarray(inserted, dtype=np.int32).reshape(-1, 2),
             np.asarray(ins_slots, dtype=np.int32),
@@ -123,24 +160,51 @@ class EdgeBuffer:
         v = np.full(new_capacity, self.sentinel, dtype=np.int32)
         u[: self.capacity] = self._u
         v[: self.capacity] = self._v
-        self._free = list(range(new_capacity - 1, self.capacity - 1, -1)) + self._free
+        self._fresh = (list(range(new_capacity - 1, self.capacity - 1, -1))
+                       + self._fresh)
         self._u, self._v = u, v
         self.capacity = new_capacity
         self.generation += 1
 
-    def epoch_compact(self) -> None:
-        """Rebuild a dense slot prefix (hole-free). Called by the delta
-        engine's epoch refresh; O(n_edges), amortized away by the epoch."""
+    def shrink_target(self) -> int | None:
+        """Pow-2 capacity an epoch shrink would land on, or None.
+
+        Hysteresis: only fires below ``SHRINK_FRACTION`` occupancy and the
+        target keeps 2x headroom (next regrow needs the live set to double),
+        so grow/shrink cannot oscillate on a stable graph."""
+        if self.n_edges > self.capacity * SHRINK_FRACTION:
+            return None
+        target = max(next_pow2(2 * max(self.n_edges, 1)), self.min_capacity)
+        return target if target < self.capacity else None
+
+    def epoch_compact(self, shrink: bool = False) -> bool:
+        """Rebuild a dense slot prefix (hole-free); with ``shrink=True``
+        also drop to ``shrink_target()`` when the hysteresis allows. Called
+        by the delta engine's epoch refresh; O(n_edges), amortized away by
+        the epoch. Returns True when capacity changed."""
+        new_capacity = self.capacity
+        if shrink:
+            target = self.shrink_target()
+            if target is not None:
+                new_capacity = target
         pairs = sorted(self._slot)
-        self._u.fill(self.sentinel)
-        self._v.fill(self.sentinel)
+        if new_capacity != self.capacity:
+            self._u = np.full(new_capacity, self.sentinel, dtype=np.int32)
+            self._v = np.full(new_capacity, self.sentinel, dtype=np.int32)
+        else:
+            self._u.fill(self.sentinel)
+            self._v.fill(self.sentinel)
+        shrunk = new_capacity != self.capacity
+        self.capacity = new_capacity
         self._slot = {}
         for i, (u, v) in enumerate(pairs):
             self._slot[(u, v)] = i
             self._u[i] = u
             self._v[i] = v
-        self._free = list(range(self.capacity - 1, len(pairs) - 1, -1))
+        self._fresh = list(range(self.capacity - 1, len(pairs) - 1, -1))
+        self._holes = []
         self.generation += 1
+        return shrunk
 
     # -- views --------------------------------------------------------------
     def host_view(self) -> tuple[np.ndarray, np.ndarray]:
@@ -171,4 +235,5 @@ class EdgeBuffer:
         )
 
 
-__all__ = ["EdgeBuffer", "next_pow2", "MIN_CAPACITY"]
+__all__ = ["EdgeBuffer", "next_pow2", "MIN_CAPACITY", "SHRINK_FRACTION",
+           "TOMBSTONE_COMPACT_FRACTION"]

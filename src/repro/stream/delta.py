@@ -48,28 +48,137 @@ the proof sketch and tests/test_prune.py for the adversarial cases. In
 pruned mode ``warm_density``/``warm_mask`` simply mirror the exact result
 (the prev-mask re-evaluation moved into the plan bootstrap, off the
 per-query hot path).
+
+Sharding (ISSUE 3): with ``sharded=True`` every device-resident array and
+every jitted entry point routes through the ``core/distributed.py``
+shard_map engine — edge slots partitioned over a mesh exactly like
+``shard_edges`` (per-device sentinel-padded shards), |V|-sized degree/mask
+state replicated, and all cross-shard reductions (update histograms, peel
+degree deltas, scalar density state) realized as one psum per pass: the
+paper's atomicSub at pod scale. Since every reduction is exact int32, the
+sharded engine's (density, mask, passes) triple is bit-identical to the
+single-device engine on ANY device count — asserted on 1-device meshes and
+fp32-checked on forced multi-device CPU meshes in tests/test_shard.py. The
+mesh is injected at construction (``mesh=``) or defaults to one flat axis
+over the local devices; tenants opt in individually through the registry.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from dataclasses import replace as dc_replace
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.cbds import _cbds_jit
 from repro.core.density import induced_edge_count
+from repro.core.distributed import (
+    SHARDED_JITS, flat_shard_index, make_sharded_warm_peel,
+    mesh_device_count, validate_stream_mesh,
+)
 from repro.core.pbahmani import PeelState, _pbahmani_jit, pbahmani_pass
 from repro.core.prune import (
-    PrunePlan, _bucket_peel_jit, _plan_jit, build_plan, pruned_peel_host,
+    PrunePlan, _bucket_peel_jit, _plan_jit, build_plan, make_sharded_plan,
+    pruned_peel_host,
 )
 from repro.stream.buffer import EdgeBuffer, MIN_CAPACITY, next_pow2
+from repro.utils.compat import make_mesh_auto, shard_map_compat
 
 MIN_BATCH = 64  # smallest padded update-batch shape (pow-2 buckets above)
 DELETE_STALENESS_WEIGHT = 3.0  # an all-delete batch ages the epoch 4x
+
+
+@lru_cache(maxsize=None)
+def default_stream_mesh():
+    """One flat mesh over the largest pow-2 prefix of the local devices,
+    shared by every sharded tenant that doesn't inject its own (sharing the
+    mesh is what lets same-bucket tenants share sharded executables)."""
+    n = len(jax.devices())
+    n = 1 << (n.bit_length() - 1)  # largest power of two <= n
+    return make_mesh_auto((n,), ("shard",))
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_resync(mesh):
+    """Cached jitted identity that places (src, dst, deg, prev_mask) with
+    the exact output shardings every other sharded entry point produces.
+    Uploading with plain ``device_put`` leaves arrays whose sharding object
+    differs from a jit output's in the compile-cache key — the first batch
+    after a resync would silently recompile. Laundering the upload through
+    this no-op keeps the hot path at one executable per shape."""
+    axes = tuple(mesh.axis_names)
+
+    def body(src_l, dst_l, deg, mask):
+        return src_l, dst_l, deg, mask
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh, in_specs=(P(axes), P(axes), P(), P()),
+        out_specs=(P(axes), P(axes), P(), P()), check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_mask_sync(mesh):
+    """Cached jitted identity for a replicated |V| mask — same laundering
+    rationale as ``_make_sharded_resync``, for the pruned path's host-built
+    prev mask (a raw ``jnp.asarray`` would carry a different sharding into
+    the plan/warm-peel cache keys and silently recompile them)."""
+    run = jax.jit(shard_map_compat(
+        lambda m: m, mesh=mesh, in_specs=(P(),), out_specs=P(),
+        check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_apply(mesh, n_nodes: int):
+    """Cached jitted sharded analog of ``_apply_batch_jit``: the edge-slot
+    scatter runs per shard (each device drops writes outside its lane
+    block), and the signed degree histogram is computed per shard over a
+    slice of the batch then psum'd — the paper's atomicAdd/atomicSub pair
+    as one all-reduce. Batch arrays are replicated (O(batch), tiny); the
+    slot arrays are sharded over the mesh."""
+    axes = tuple(mesh.axis_names)
+    n_dev = mesh_device_count(mesh)
+
+    def body(src_l, dst_l, deg, slots, su, sv, du, dv, w):
+        lanes = src_l.shape[0]          # 2*capacity // n_dev
+        me = flat_shard_index(mesh)
+        base = me * lanes
+        cap = (lanes * n_dev) // 2
+        # mirror writes land at slot and slot+cap; translate to local lane
+        # indices, routing misses (and the OOB padding marker) to `lanes`
+        # which mode="drop" discards
+        p1 = slots - base
+        p2 = slots + cap - base
+        p1 = jnp.where((p1 >= 0) & (p1 < lanes), p1, lanes)
+        p2 = jnp.where((p2 >= 0) & (p2 < lanes), p2, lanes)
+        src_l = src_l.at[p1].set(su, mode="drop").at[p2].set(sv, mode="drop")
+        dst_l = dst_l.at[p1].set(sv, mode="drop").at[p2].set(su, mode="drop")
+        b_local = w.shape[0] // n_dev
+        start = (me * b_local).astype(jnp.int32)
+        w_l = jax.lax.dynamic_slice(w, (start,), (b_local,))
+        du_l = jax.lax.dynamic_slice(du, (start,), (b_local,))
+        dv_l = jax.lax.dynamic_slice(dv, (start,), (b_local,))
+        d_u = jax.ops.segment_sum(
+            w_l, jnp.minimum(du_l, n_nodes), num_segments=n_nodes + 1)
+        d_v = jax.ops.segment_sum(
+            w_l, jnp.minimum(dv_l, n_nodes), num_segments=n_nodes + 1)
+        d = jax.lax.psum(d_u[:n_nodes] + d_v[:n_nodes], axes)
+        deg = (deg + d).astype(jnp.int32)
+        return src_l, dst_l, deg
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(axes), P(axes), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=(P(axes), P(axes), P()), check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
@@ -142,7 +251,8 @@ class UpdateStats:
     n_deleted: int
     n_edges: int
     batch_capacity: int   # padded device batch shape actually dispatched
-    regrew: bool          # buffer capacity doubled (new compile shape)
+    regrew: bool          # buffer layout epoch changed (grow or tombstone
+                          # compaction): device state was rebuilt whole
     latency_ms: float
 
 
@@ -174,6 +284,9 @@ class EngineMetrics:
     candidate_fraction: float = 0.0  # |ceil(rho~)-core| / n_nodes
     prune_bucket_v: int = 0
     prune_bucket_e: int = 0
+    # contracting-graph bookkeeping (ISSUE 3 bugfixes)
+    n_buffer_shrinks: int = 0     # epoch refreshes that halved slot capacity
+    n_bucket_shrinks: int = 0     # mid-epoch prune-bucket shrinks
 
 
 class DeltaEngine:
@@ -186,6 +299,8 @@ class DeltaEngine:
         capacity: int = MIN_CAPACITY,
         refresh_every: int = 32,
         pruned: bool = True,
+        sharded: bool = False,
+        mesh=None,
     ):
         if n_nodes <= 0:
             raise ValueError("DeltaEngine needs n_nodes >= 1")
@@ -196,7 +311,20 @@ class DeltaEngine:
         self.eps = float(eps)
         self.refresh_every = int(refresh_every)
         self.pruned = bool(pruned)
-        self.buffer = EdgeBuffer(self.node_capacity, capacity=capacity)
+        self.sharded = bool(sharded)
+        # sharded=True routes all device state through the shard_map engine:
+        # edge slots partitioned over the mesh (per-device sentinel-padded
+        # shards), |V|-sized state replicated, scalar state psum'd — one
+        # tenant's graph spans the mesh instead of one chip
+        self.mesh = None
+        n_dev = 1
+        if self.sharded:
+            self.mesh = mesh if mesh is not None else default_stream_mesh()
+            n_dev = validate_stream_mesh(
+                self.mesh, max(next_pow2(capacity), MIN_CAPACITY))
+        # floor capacity (incl. epoch shrinks) at one lane block per device
+        self.buffer = EdgeBuffer(self.node_capacity, capacity=capacity,
+                                 min_capacity=max(MIN_CAPACITY, n_dev // 2))
         self.metrics = EngineMetrics()
         self._src = None          # device int32 [2*capacity], sentinel-padded
         self._dst = None
@@ -213,14 +341,27 @@ class DeltaEngine:
     def sentinel(self) -> int:
         return self.node_capacity
 
+    @property
+    def n_shards(self) -> int:
+        """Devices this tenant's edge slots are partitioned across."""
+        return mesh_device_count(self.mesh) if self.mesh is not None else 1
+
     def _resync_device(self) -> None:
-        """Full O(|E|) upload — on first use, regrow, or epoch compaction."""
+        """Full O(|E|) upload — on first use, regrow, or epoch compaction.
+        Sharded engines place the slot arrays partitioned over the mesh and
+        the degree array replicated, so no later call ever reshards."""
         src, dst = self.buffer.device_view()
-        self._src = jnp.asarray(src)
-        self._dst = jnp.asarray(dst)
         valid = src[src < self.sentinel]
         deg = np.bincount(valid, minlength=self.node_capacity)
-        self._deg = jnp.asarray(deg[: self.node_capacity], dtype=jnp.int32)
+        deg = deg[: self.node_capacity].astype(np.int32)
+        if self.mesh is not None:
+            self._src, self._dst, self._deg, self._prev_mask = (
+                _make_sharded_resync(self.mesh)(
+                    src, dst, deg, np.asarray(self._prev_mask)))
+        else:
+            self._src = jnp.asarray(src)
+            self._dst = jnp.asarray(dst)
+            self._deg = jnp.asarray(deg)
         self._generation = self.buffer.generation
 
     def _check_endpoints(self, edges) -> None:
@@ -246,13 +387,16 @@ class DeltaEngine:
         regrew = self.buffer.generation != gen_before
 
         if regrew:
-            # capacity doubled: slots moved shape, rebuild device state whole
-            # (and invalidate the prune plan — its lane-width basis is stale)
+            # capacity doubled or tombstones forced a compaction: the slot
+            # layout moved, rebuild device state whole (and invalidate the
+            # prune plan — its lane-width basis may be stale)
             self._resync_device()
             self._plan = None
         else:
             n = ins.shape[0] + dele.shape[0]
-            b = max(next_pow2(max(n, 1)), MIN_BATCH)
+            # pow-2 batch pad; sharded engines also need the batch divisible
+            # into per-device histogram slices (n_shards is pow-2)
+            b = max(next_pow2(max(n, 1)), MIN_BATCH, self.n_shards)
             sent = self.sentinel
             slots = np.full(b, 2 * self.buffer.capacity, np.int32)  # OOB pad
             su = np.full(b, sent, np.int32)
@@ -276,12 +420,20 @@ class DeltaEngine:
                 su[m : m + k], sv[m : m + k] = ins[:, 0], ins[:, 1]
                 du[m : m + k], dv[m : m + k] = ins[:, 0], ins[:, 1]
                 w[m : m + k] = 1
-            self._src, self._dst, self._deg = _apply_batch_jit(
-                self._src, self._dst, self._deg,
-                jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
-                jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
-                self.node_capacity,
-            )
+            if self.mesh is not None:
+                apply_fn = _make_sharded_apply(self.mesh, self.node_capacity)
+                self._src, self._dst, self._deg = apply_fn(
+                    self._src, self._dst, self._deg,
+                    jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
+                    jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
+                )
+            else:
+                self._src, self._dst, self._deg = _apply_batch_jit(
+                    self._src, self._dst, self._deg,
+                    jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
+                    jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
+                    self.node_capacity,
+                )
             self.metrics.shape_buckets.add((2 * self.buffer.capacity, b))
 
         # staleness ages faster on delete-heavy batches: tombstone holes are
@@ -310,10 +462,18 @@ class DeltaEngine:
         edges, so the bound stays sound after deletions); the last observed
         handoff sizes the buckets with slack, so steady-state epochs keep
         reusing one compiled executable (``bucket_reuses``)."""
-        rho_lb, k, _, n_cand, ne_cand = _plan_jit(
-            self._src, self._dst, self._prev_mask,
-            jnp.asarray(self.buffer.n_edges, jnp.int32), self.node_capacity,
-        )
+        if self.mesh is not None:
+            rho_lb, k, _, n_cand, ne_cand = make_sharded_plan(
+                self.mesh, self.node_capacity)(
+                self._src, self._dst, self._prev_mask,
+                jnp.asarray(self.buffer.n_edges, jnp.int32),
+            )
+        else:
+            rho_lb, k, _, n_cand, ne_cand = _plan_jit(
+                self._src, self._dst, self._prev_mask,
+                jnp.asarray(self.buffer.n_edges, jnp.int32),
+                self.node_capacity,
+            )
         new = build_plan(
             float(rho_lb), int(k), int(n_cand), int(ne_cand),
             node_width=self.node_capacity,
@@ -339,7 +499,7 @@ class DeltaEngine:
         u, v = self.buffer.host_view()
         res = pruned_peel_host(
             u, v, np.asarray(self._deg),
-            self.buffer.n_edges, self.eps, self._plan,
+            self.buffer.n_edges, self.eps, self._plan, mesh=self.mesh,
         )
         if res is None:
             # survivor set fits no legal bucket this epoch: stop paying the
@@ -349,11 +509,18 @@ class DeltaEngine:
             return None
         density, mask, passes, observed, plan = res
         self._last_handoff = observed
-        if plan is not self._plan:  # in-flight bucket regrow (fit-miss)
+        if plan is not self._plan:  # in-flight bucket regrow or shrink
+            if (plan.bucket_v < self._plan.bucket_v
+                    or plan.bucket_e < self._plan.bucket_e):
+                self.metrics.n_bucket_shrinks += 1
             self._plan = plan
             self.metrics.prune_bucket_v = plan.bucket_v
             self.metrics.prune_bucket_e = plan.bucket_e
-        self._prev_mask = jnp.asarray(mask)
+        if self.mesh is not None:
+            self._prev_mask = _make_sharded_mask_sync(self.mesh)(
+                jnp.asarray(mask))
+        else:
+            self._prev_mask = jnp.asarray(mask)
         self.metrics.n_pruned_queries += 1
         return density, mask[: self.n_nodes], passes
 
@@ -362,12 +529,30 @@ class DeltaEngine:
     def stale(self) -> bool:
         return self._staleness >= self.refresh_every
 
+    def _cold_full_peel(self) -> PeelState:
+        """Full-width peel re-anchor. Sharded engines route through the
+        sharded warm peel from the exactly-resynced degree array — the
+        maintained-state init is bit-identical to ``init_state``'s cold
+        histogram, so the trajectory (and triple) matches ``_pbahmani_jit``."""
+        if self.mesh is not None:
+            final, _ = make_sharded_warm_peel(
+                self.mesh, self.node_capacity, self.eps)(
+                self._src, self._dst, self._deg,
+                jnp.asarray(self.buffer.n_edges, jnp.int32), self._prev_mask)
+            return final
+        return _pbahmani_jit(
+            self._src, self._dst, self.node_capacity,
+            jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps)
+
     def refresh(self) -> QueryResult:
-        """Epoch refresh: compact the buffer, rebuild device state, rebuild
+        """Epoch refresh: compact the buffer (shrinking capacity when the
+        graph contracted past the hysteresis), rebuild device state, rebuild
         the prune plan (warm-started from the previous epoch's density), and
         re-anchor with a cold peel — compacted when the plan allows."""
         t0 = time.perf_counter()
-        self.buffer.epoch_compact()
+        if self.buffer.epoch_compact(shrink=True):
+            self.metrics.n_buffer_shrinks += 1
+            self._plan = None  # lane-width sizing basis changed
         self._resync_device()
         self._staleness = 0.0
         out = None
@@ -379,10 +564,7 @@ class DeltaEngine:
             density, mask, passes = out
             pruned_flag = True
         else:
-            final = _pbahmani_jit(
-                self._src, self._dst, self.node_capacity,
-                jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps,
-            )
+            final = self._cold_full_peel()
             self._prev_mask = final.best_mask
             density = float(final.best_density)
             mask = np.asarray(final.best_mask)[: self.n_nodes]
@@ -425,11 +607,17 @@ class DeltaEngine:
                     refreshed=False, latency_ms=ms, pruned=True,
                 )
                 return self._cached_query
-        final, warm_rho = _warm_peel_jit(
-            self._src, self._dst, self._deg,
-            jnp.asarray(self.buffer.n_edges, jnp.int32),
-            self._prev_mask, self.node_capacity, self.eps,
-        )
+        if self.mesh is not None:
+            final, warm_rho = make_sharded_warm_peel(
+                self.mesh, self.node_capacity, self.eps)(
+                self._src, self._dst, self._deg,
+                jnp.asarray(self.buffer.n_edges, jnp.int32), self._prev_mask)
+        else:
+            final, warm_rho = _warm_peel_jit(
+                self._src, self._dst, self._deg,
+                jnp.asarray(self.buffer.n_edges, jnp.int32),
+                self._prev_mask, self.node_capacity, self.eps,
+            )
         density = float(final.best_density)
         warm_rho = float(warm_rho)
         mask = np.asarray(final.best_mask)[: self.n_nodes]
@@ -455,13 +643,23 @@ class DeltaEngine:
         return self.query().density
 
     def cbds(self, rounds: int = 1) -> dict:
-        """CBDS-P on the current graph through the existing ``_cbds_jit``."""
+        """CBDS-P on the current graph through the existing ``_cbds_jit``.
+        Sharded engines dispatch a fresh single-device upload — CBDS is an
+        off-hot-path diagnostic, and routing the resident sharded arrays
+        through a non-shard_map jit would silently all-gather anyway."""
         if self._generation < 0:
             self._resync_device()
-        res = _cbds_jit(
-            self._src, self._dst, self.node_capacity,
-            jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
-        )
+        if self.mesh is not None:
+            src, dst = self.buffer.device_view()
+            res = _cbds_jit(
+                jnp.asarray(src), jnp.asarray(dst), self.node_capacity,
+                jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
+            )
+        else:
+            res = _cbds_jit(
+                self._src, self._dst, self.node_capacity,
+                jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
+            )
         return {
             "density": float(res.density),
             "core_density": float(res.core_density),
@@ -479,10 +677,15 @@ class DeltaEngine:
     def compile_count() -> int:
         """Total executables compiled for the engine's jitted entry points.
         Class-level: the jit caches are shared by every engine/tenant — that
-        sharing is exactly what the registry's capacity bucketing buys."""
+        sharing is exactly what the registry's capacity bucketing buys.
+        Sharded entry points (one per mesh/width/bucket combination, kept in
+        ``SHARDED_JITS``) are counted too, so the zero-recompile contract
+        covers sharded tenants."""
         total = 0
         for fn in (_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit,
                    _bucket_peel_jit, _plan_jit):
+            total += fn._cache_size()
+        for fn in SHARDED_JITS:
             total += fn._cache_size()
         return total
 
@@ -490,10 +693,10 @@ class DeltaEngine:
         return (
             f"DeltaEngine(|V|={self.n_nodes}/{self.node_capacity}, "
             f"|E|={self.buffer.n_edges}, eps={self.eps}, "
-            f"pruned={self.pruned}, "
+            f"pruned={self.pruned}, shards={self.n_shards}, "
             f"stale_in={self.refresh_every - self._staleness:.1f})"
         )
 
 
 __all__ = ["DeltaEngine", "QueryResult", "UpdateStats", "EngineMetrics",
-           "MIN_BATCH", "DELETE_STALENESS_WEIGHT"]
+           "MIN_BATCH", "DELETE_STALENESS_WEIGHT", "default_stream_mesh"]

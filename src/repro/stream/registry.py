@@ -51,19 +51,34 @@ class TenantStats:
     prune_bucket_v: int = 0
     prune_bucket_e: int = 0
     bucket_reuses: int = 0
+    # sharded streaming (core/distributed.py): how many devices the
+    # tenant's edge slots span, plus the contracting-graph counters — a
+    # healthy sliding-window tenant shows shrinks instead of a capacity
+    # high-water mark, and a delete-heavy one shows tombstone compactions
+    sharded: bool = False
+    n_shards: int = 1
+    n_buffer_shrinks: int = 0
+    n_bucket_shrinks: int = 0
+    tombstone_fraction: float = 0.0
 
 
 class GraphRegistry:
     """Name -> DeltaEngine map with capacity bucketing + LRU eviction."""
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
-                 refresh_every: int = 32, pruned: bool = True):
+                 refresh_every: int = 32, pruned: bool = True,
+                 sharded: bool = False, mesh=None):
         if max_tenants <= 0:
             raise ValueError("max_tenants must be >= 1")
         self.max_tenants = int(max_tenants)
         self.default_eps = float(eps)
         self.default_refresh_every = int(refresh_every)
         self.default_pruned = bool(pruned)
+        # one mesh for the whole registry, injected at construction: sharded
+        # tenants in the same capacity buckets then share the same sharded
+        # executables (the lru-cached factories key on the mesh object)
+        self.default_sharded = bool(sharded)
+        self.mesh = mesh
         self._engines: OrderedDict[str, DeltaEngine] = OrderedDict()
         self.evictions = 0
 
@@ -76,8 +91,14 @@ class GraphRegistry:
         capacity: int = MIN_CAPACITY,
         refresh_every: int | None = None,
         pruned: bool | None = None,
+        sharded: bool | None = None,
     ) -> DeltaEngine:
         """Create (or return the existing) engine for ``name``.
+
+        ``sharded=True`` opts the tenant into the shard_map engine (the
+        registry's mesh, or the default flat mesh over the local devices):
+        its edge slots span every device instead of one chip, at identical
+        query results (tests/test_shard.py parity oracle).
 
         Re-registering with the same logical config is an idempotent no-op;
         a conflicting config raises rather than silently handing back an
@@ -85,11 +106,15 @@ class GraphRegistry:
         if name in self._engines:
             eng = self.get(name)
             want_eps = self.default_eps if eps is None else float(eps)
-            if eng.n_nodes != int(n_nodes) or eng.eps != want_eps:
+            want_sharded = (self.default_sharded if sharded is None
+                            else bool(sharded))
+            if (eng.n_nodes != int(n_nodes) or eng.eps != want_eps
+                    or eng.sharded != want_sharded):
                 raise ValueError(
                     f"tenant {name!r} already registered with "
-                    f"n_nodes={eng.n_nodes}, eps={eng.eps}; got "
-                    f"n_nodes={n_nodes}, eps={want_eps}"
+                    f"n_nodes={eng.n_nodes}, eps={eng.eps}, "
+                    f"sharded={eng.sharded}; got n_nodes={n_nodes}, "
+                    f"eps={want_eps}, sharded={want_sharded}"
                 )
             return eng
         eng = DeltaEngine(
@@ -101,6 +126,9 @@ class GraphRegistry:
                 else int(refresh_every)
             ),
             pruned=self.default_pruned if pruned is None else bool(pruned),
+            sharded=(self.default_sharded if sharded is None
+                     else bool(sharded)),
+            mesh=self.mesh,
         )
         self._engines[name] = eng
         self._engines.move_to_end(name)
@@ -152,6 +180,11 @@ class GraphRegistry:
             prune_bucket_v=m.prune_bucket_v,
             prune_bucket_e=m.prune_bucket_e,
             bucket_reuses=m.bucket_reuses,
+            sharded=eng.sharded,
+            n_shards=eng.n_shards,
+            n_buffer_shrinks=m.n_buffer_shrinks,
+            n_bucket_shrinks=m.n_bucket_shrinks,
+            tombstone_fraction=eng.buffer.tombstone_fraction,
         )
 
     def all_stats(self) -> list[TenantStats]:

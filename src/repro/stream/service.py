@@ -50,10 +50,11 @@ class StreamService:
     """Single-process front-end; one registry, many tenants."""
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
-                 refresh_every: int = 32, pruned: bool = True):
+                 refresh_every: int = 32, pruned: bool = True,
+                 sharded: bool = False, mesh=None):
         self.registry = GraphRegistry(
             max_tenants=max_tenants, eps=eps, refresh_every=refresh_every,
-            pruned=pruned,
+            pruned=pruned, sharded=sharded, mesh=mesh,
         )
         self.metrics = ServiceMetrics()
 
@@ -79,21 +80,26 @@ class StreamService:
     # -- tenant lifecycle ---------------------------------------------------
     def create_tenant(self, tenant: str, n_nodes: int, eps: float | None = None,
                       capacity: int = MIN_CAPACITY,
-                      pruned: bool | None = None) -> ServiceResponse:
+                      pruned: bool | None = None,
+                      sharded: bool | None = None) -> ServiceResponse:
         """``pruned=False`` opts a tenant back into the PR-1 warm-mask path,
         whose warm_density is an anytime lower bound that can exceed the
         exact density right after deletions (pruned tenants mirror the
-        exact result instead)."""
+        exact result instead). ``sharded=True`` opts the tenant into the
+        shard_map engine — its graph spans the service's mesh at identical
+        query results, lifting the one-chip memory cap."""
         t0 = time.perf_counter()
         try:
             eng = self.registry.register(tenant, n_nodes, eps=eps,
-                                         capacity=capacity, pruned=pruned)
+                                         capacity=capacity, pruned=pruned,
+                                         sharded=sharded)
         except (ValueError, KeyError) as e:
             return self._respond("create_tenant", tenant, t0, error=str(e))
         return self._respond(
             "create_tenant", tenant, t0,
             value={"node_capacity": eng.node_capacity,
-                   "edge_capacity": eng.buffer.capacity},
+                   "edge_capacity": eng.buffer.capacity,
+                   "n_shards": eng.n_shards},
         )
 
     # -- ingest -------------------------------------------------------------

@@ -259,3 +259,44 @@ def test_service_reports_pruned_flag():
     svc.create_tenant("legacy", n_nodes=64, pruned=False)
     assert not svc.registry.get("legacy").pruned
     assert not svc.stats("legacy").value.pruned
+
+
+def test_engine_mid_epoch_bucket_shrink():
+    """ISSUE 3 bugfix: plans used to only *regrow* buckets mid-epoch, so a
+    contracting graph kept peeling inside peak-size buckets until the next
+    refresh. An observation-sized plan now shrinks mid-epoch once the
+    handoff fits BUCKET_SHRINK_HYSTERESIS-times-smaller buckets — at
+    bit-identical results. First-shot (conservative) plans never shrink:
+    that headroom is warmup slack, not contraction."""
+    rng = np.random.default_rng(31)
+    g, _, _ = planted_dense(1024, 48, seed=5)
+    half = g.n_directed // 2
+    seed_edges = np.stack([g.src[:half], g.dst[:half]], axis=1).astype(np.int64)
+    eng = DeltaEngine(n_nodes=1024, capacity=8192, refresh_every=10**9)
+    eng.apply_updates(insert=seed_edges)
+    eng.query()
+    # first-shot plan: tiny handoff slack is intentional, no shrink yet
+    assert not eng._plan.from_observed
+    assert eng.metrics.n_bucket_shrinks == 0
+    eng.refresh()  # plan now sized from the observed handoff
+    assert eng._plan.from_observed
+    be_before = eng.metrics.prune_bucket_e
+
+    # contract hard mid-epoch: drop ~95% of edges, keep the planted block
+    pool = np.asarray(sorted(eng.buffer._slot))
+    dels = pool[rng.random(len(pool)) >= 0.05]
+    for i in range(0, len(dels), 512):
+        eng.apply_updates(delete=dels[i: i + 512])
+    q = eng.query()
+    assert q.pruned
+    assert eng.metrics.n_bucket_shrinks >= 1
+    assert eng.metrics.prune_bucket_e < be_before
+    rho, mask, passes = pbahmani_np(eng.buffer.to_graph())
+    assert q.density == pytest.approx(rho, rel=1e-6, abs=1e-9)
+    assert np.array_equal(q.mask, mask[:1024]) and q.passes == passes
+
+    # hysteresis: a stable graph never shrinks again on the next query
+    shrinks = eng.metrics.n_bucket_shrinks
+    eng._cached_query = None
+    eng.query()
+    assert eng.metrics.n_bucket_shrinks == shrinks

@@ -111,6 +111,87 @@ def test_buffer_rejects_out_of_range():
         buf.apply(insert=np.array([[0, 10]]))
 
 
+def test_buffer_epoch_shrink_with_hysteresis():
+    """ISSUE 3 bugfix: capacity used to only ever grow. An epoch compact
+    with shrink=True halves down to pow-2 with 2x headroom — but only below
+    SHRINK_FRACTION occupancy, so stable graphs never thrash."""
+    from repro.stream.buffer import MIN_CAPACITY, SHRINK_FRACTION
+
+    buf = EdgeBuffer(n_nodes=100, capacity=1024, compact_threshold=None)
+    rng = np.random.default_rng(2)
+    buf.apply(insert=rng.integers(0, 100, (400, 2)))
+    n_mid = buf.n_edges
+    assert buf.capacity == 1024
+    # above the hysteresis floor: no shrink
+    assert n_mid > 1024 * SHRINK_FRACTION
+    assert buf.shrink_target() is None
+    assert not buf.epoch_compact(shrink=True)
+    assert buf.capacity == 1024
+
+    # contract far below the floor: shrink to next_pow2(2*live)
+    pool = np.asarray(sorted(buf._slot))
+    buf.apply(delete=pool[60:])
+    assert buf.n_edges == 60
+    before = buf.to_graph()
+    gen0 = buf.generation
+    assert buf.epoch_compact(shrink=True)
+    assert buf.capacity == max(next_pow2(120), MIN_CAPACITY) == 256
+    assert buf.generation > gen0
+    after = buf.to_graph()
+    assert before.n_edges == after.n_edges
+    assert np.array_equal(before.src, after.src)
+    # post-shrink occupancy <= 50%: the next regrow needs the graph to double
+    assert buf.n_edges <= buf.capacity // 2
+    # and the buffer still works: inserts land in the shrunken slot space
+    buf.apply(insert=np.array([[0, 99]]))
+    assert (0, 99) in buf
+
+
+def test_buffer_tombstone_autocompact():
+    """ISSUE 3 bugfix: delete-heavy streams fragment the slot space with no
+    compaction threshold. When un-recycled holes exceed compact_threshold
+    the buffer compacts mid-stream and bumps generation (so engines resync
+    and executables re-bucket)."""
+    buf = EdgeBuffer(n_nodes=100, capacity=256, compact_threshold=0.3)
+    rng = np.random.default_rng(3)
+    buf.apply(insert=rng.integers(0, 100, (250, 2)))
+    n0 = buf.n_edges
+    gen0 = buf.generation
+    pool = np.asarray(sorted(buf._slot))
+    buf.apply(delete=pool[: n0 - 50])  # way past 0.3 * 256 holes
+    assert buf.generation > gen0                 # compaction happened
+    assert buf.tombstone_fraction == 0.0         # holes cleared
+    src, _ = buf.device_view()
+    assert (src[: buf.n_edges] < buf.sentinel).all()   # dense prefix
+    assert (src[buf.n_edges: buf.capacity] == buf.sentinel).all()
+
+    # holes below the threshold leave the layout alone (O(batch) contract)
+    buf2 = EdgeBuffer(n_nodes=100, capacity=256, compact_threshold=0.5)
+    buf2.apply(insert=rng.integers(0, 100, (100, 2)))
+    gen1 = buf2.generation
+    pool2 = np.asarray(sorted(buf2._slot))
+    buf2.apply(delete=pool2[:20])
+    assert buf2.generation == gen1
+    assert buf2.tombstone_fraction > 0.0
+
+    # threshold=None disables mid-stream compaction entirely
+    buf3 = EdgeBuffer(n_nodes=100, capacity=256, compact_threshold=None)
+    buf3.apply(insert=rng.integers(0, 100, (250, 2)))
+    gen3 = buf3.generation
+    buf3.apply(delete=np.asarray(sorted(buf3._slot)))
+    assert buf3.generation == gen3
+
+
+def test_buffer_hole_reuse_keeps_fragmentation_low():
+    """Freed slots recycle before fresh ones, so churn (delete+insert in
+    one batch) leaves no tombstones behind."""
+    buf = EdgeBuffer(n_nodes=100, capacity=256)
+    buf.apply(insert=np.array([[0, 1], [1, 2], [2, 3]]))
+    buf.apply(delete=np.array([[0, 1]]), insert=np.array([[4, 5]]))
+    assert buf.tombstone_fraction == 0.0
+    assert buf.n_edges == 3
+
+
 # ---------------------------------------------------------------------------
 # DeltaEngine: the incremental == from-scratch oracle
 # ---------------------------------------------------------------------------
@@ -235,6 +316,143 @@ def test_staleness_weighted_by_deleted_fraction():
                       delete=np.array([[0, 1]]))
     assert eng3._staleness == pytest.approx(
         3.0 + DELETE_STALENESS_WEIGHT * 0.25)
+
+
+def test_engine_grow_shrink_grow_roundtrip():
+    """ISSUE 3 acceptance: a grow -> shrink -> grow cycle returns correct
+    results at every step, and revisited capacities are jit-cache hits —
+    zero recompiles once every steady-state shape has been seen."""
+    rng = np.random.default_rng(19)
+    n = 256
+    eng = DeltaEngine(n_nodes=n, capacity=256, refresh_every=10**9,
+                      pruned=False)
+    edges: set = set()
+
+    def feed(k):
+        """Insert k fresh edges in batches of <=48 (one padded batch shape)."""
+        added = 0
+        while added < k:
+            ins = rng.integers(0, n, (48, 2))
+            for u, v in ins:
+                u, v = int(u), int(v)
+                if u != v:
+                    edges.add((min(u, v), max(u, v)))
+            eng.apply_updates(insert=ins)
+            added += 48
+
+    def drop_to(k):
+        pool = np.asarray(sorted(edges))
+        dels = pool[k:]
+        for u, v in dels:
+            edges.discard((int(u), int(v)))
+        for i in range(0, len(dels), 48):
+            eng.apply_updates(delete=dels[i: i + 48])
+
+    def check():
+        q = eng.query()
+        rho, mask, passes = pbahmani_np(materialize(edges, n))
+        assert q.density == pytest.approx(rho, rel=1e-6, abs=1e-9)
+        assert np.array_equal(q.mask, mask) and q.passes == passes
+
+    # grow phase: visit capacities 256 -> 512 -> 1024, warming the query
+    # AND refresh executables at each
+    for target in (200, 400, 800):
+        feed(target - len(edges))
+        check()
+        eng.refresh()
+        check()
+    assert eng.buffer.capacity == 1024
+    caps_seen = DeltaEngine.compile_count()
+
+    # shrink: contract to 120 live edges; the refresh compacts + halves
+    drop_to(120)
+    check()                      # pre-shrink query at peak capacity
+    q = eng.refresh()            # epoch refresh triggers the shrink
+    assert eng.buffer.capacity == 256, eng.buffer.capacity
+    assert eng.metrics.n_buffer_shrinks == 1
+    rho, mask, passes = pbahmani_np(materialize(edges, n))
+    assert q.density == pytest.approx(rho, rel=1e-6, abs=1e-9)
+    assert np.array_equal(q.mask, mask) and q.passes == passes
+    check()
+
+    # regrow through the same capacities: every shape is a cache hit
+    feed(700 - len(edges))
+    check()
+    eng.refresh()
+    check()
+    assert eng.buffer.capacity == 1024
+    assert DeltaEngine.compile_count() == caps_seen, (
+        "revisited capacities recompiled")
+
+
+def test_engine_delete_heavy_capacity_bound():
+    """ISSUE 3 acceptance: a delete-heavy stream shrinking a tenant from
+    2^16 to 2^10 live edges must end with buffer capacity <= 4x live size,
+    with query results unchanged."""
+    rng = np.random.default_rng(23)
+    n = 4096
+    pairs = rng.integers(0, n, (90_000, 2)).astype(np.int64)
+    u = np.minimum(pairs[:, 0], pairs[:, 1])
+    v = np.maximum(pairs[:, 0], pairs[:, 1])
+    keep = u != v
+    pairs = np.unique(np.stack([u[keep], v[keep]], axis=1), axis=0)
+    assert pairs.shape[0] >= 2**16
+    pairs = pairs[: 2**16]
+
+    eng = DeltaEngine(n_nodes=n, refresh_every=10**9)
+    eng.apply_updates(insert=pairs)
+    assert eng.n_edges == 2**16
+    assert eng.buffer.capacity == 2**16
+
+    # delete down to 2^10 live edges (chunked: one padded batch shape)
+    dels = pairs[2**10:]
+    for i in range(0, len(dels), 8192):
+        eng.apply_updates(delete=dels[i: i + 8192])
+    assert eng.n_edges == 2**10
+    q_before = eng.query()
+
+    q_after = eng.refresh()      # epoch refresh compacts + shrinks
+    live = eng.n_edges
+    assert eng.buffer.capacity <= 4 * live, (eng.buffer.capacity, live)
+    assert eng.metrics.n_buffer_shrinks >= 1
+    # query results unchanged by the shrink
+    assert q_after.density == q_before.density
+    assert np.array_equal(q_after.mask, q_before.mask)
+    assert q_after.passes == q_before.passes
+    rho, mask, passes = pbahmani_np(eng.buffer.to_graph())
+    assert q_after.density == pytest.approx(rho, rel=1e-6, abs=1e-9)
+    assert np.array_equal(q_after.mask, mask[:n]) and q_after.passes == passes
+
+
+def test_engine_tombstone_autocompact_resyncs():
+    """A delete-only stream that crosses the tombstone threshold forces a
+    mid-stream compaction; the engine detects the generation bump, resyncs
+    device state whole, and queries stay exact."""
+    rng = np.random.default_rng(29)
+    n = 128
+    eng = DeltaEngine(n_nodes=n, capacity=256, refresh_every=10**9)
+    # ~235 distinct edges: stays within the 256-slot capacity, so the 0.5
+    # threshold is 128 holes — crossed by the delete chunks below
+    ins = rng.integers(0, n, (240, 2))
+    eng.apply_updates(insert=ins)
+    edges = set(eng.buffer._slot)
+    n0 = len(edges)
+    assert eng.buffer.capacity == 256
+    pool = np.asarray(sorted(edges))
+    dels = pool[: n0 - 40]
+    saw_compact = False
+    for i in range(0, len(dels), 50):
+        chunk = dels[i: i + 50]
+        st_ = eng.apply_updates(delete=chunk)
+        for u, v in chunk:
+            edges.discard((int(u), int(v)))
+        saw_compact = saw_compact or st_.regrew
+        q = eng.query()
+        rho, mask, passes = pbahmani_np(materialize(edges, n))
+        assert q.density == pytest.approx(rho, rel=1e-6, abs=1e-9)
+        assert np.array_equal(q.mask, mask) and q.passes == passes
+    assert saw_compact, "tombstone threshold never fired"
+    assert eng.buffer.tombstone_fraction <= 0.5
 
 
 def test_engine_epoch_refresh_resyncs():
