@@ -5,10 +5,11 @@ export PYTHONPATH := src
 # algorithm-core test modules: the coverage floor is enforced on these
 COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
-	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py
+	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py \
+	tests/test_tenants.py
 
-.PHONY: test coverage bench-smoke bench-prune-smoke bench-shard-smoke \
-	bench deps-dev
+.PHONY: test coverage lint bench-smoke bench-prune-smoke bench-shard-smoke \
+	bench-tenants-smoke bench-check bench-baseline bench deps-dev
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,12 +21,14 @@ coverage:
 		--cov=repro.core --cov=repro.stream \
 		--cov-report=term-missing --cov-fail-under=75
 
+# ruff gate (needs ruff: `make deps-dev`); config in pyproject.toml
+lint:
+	$(PY) -m ruff check src benchmarks tests examples
+
 # fast end-to-end sanity: the streaming benchmark at toy scale
+# (writes BENCH_stream.json — the benchmark-trajectory artifact)
 bench-smoke:
-	$(PY) -c "import sys; sys.path.insert(0, '.'); \
-	from benchmarks import bench_stream; \
-	r = bench_stream.run(n_nodes=512, batch_size=128, n_batches=6); \
-	assert r['steady_compiles'] == 0, r"
+	$(PY) benchmarks/bench_stream.py --smoke
 
 # candidate-pruning parity + zero-recompile sanity at toy scale
 bench-prune-smoke:
@@ -35,6 +38,22 @@ bench-prune-smoke:
 bench-shard-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 		$(PY) benchmarks/bench_shard.py --smoke
+
+# fused multi-tenant parity (batched == unbatched bit-identical) +
+# zero-recompile across tenant evict/join at toy scale
+bench-tenants-smoke:
+	$(PY) benchmarks/bench_tenants.py --smoke
+
+# benchmark-trajectory gate: compare the BENCH_*.json files the smokes
+# wrote against the committed baseline (>25% regression fails)
+bench-check:
+	$(PY) benchmarks/check_regression.py
+
+# refresh benchmarks/baseline.json from the current BENCH_*.json files
+# (run the four smokes first)
+bench-baseline: bench-smoke bench-prune-smoke bench-shard-smoke \
+		bench-tenants-smoke
+	$(PY) benchmarks/check_regression.py --update
 
 bench:
 	$(PY) benchmarks/run.py

@@ -1,0 +1,47 @@
+"""BENCH_<name>.json recording — the benchmark-trajectory CI contract.
+
+Every benchmark smoke (and full run) writes one ``BENCH_<name>.json`` next
+to the working directory (or ``$BENCH_ARTIFACT_DIR``): a ``metrics`` dict
+of headline numbers and the raw ``rows``. CI uploads the files as
+artifacts, so the performance trajectory of every commit is recorded, and
+``benchmarks/check_regression.py`` gates the job against the committed
+``benchmarks/baseline.json`` — speedups land measured, regressions land
+loud. ``make bench-baseline`` refreshes the baseline from the current
+files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+
+
+def _sanitize(obj):
+    if hasattr(obj, "item"):  # numpy scalars
+        return obj.item()
+    return str(obj)
+
+
+def write_bench_json(name: str, metrics: dict, rows: list | None = None,
+                     mode: str = "full") -> str:
+    """Write BENCH_<name>.json; returns the path. ``metrics`` holds the
+    regression-gated headline numbers (machine-portable ratios preferred),
+    ``rows`` the full per-cell results for the artifact trail."""
+    payload = {
+        "bench": name,
+        "mode": mode,
+        "metrics": metrics,
+        "rows": rows or [],
+        "python": platform.python_version(),
+        "unix_time": time.time(),
+    }
+    out_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=_sanitize)
+    print(f"# wrote {path}")
+    return path
+
+
+__all__ = ["write_bench_json"]

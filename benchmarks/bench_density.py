@@ -10,11 +10,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import cbds_p, charikar, exact_densest, pbahmani
+from repro.core import cbds_p, exact_densest, pbahmani
 from repro.graphs.generators import (
     barabasi_albert, erdos_renyi, planted_dense, rmat, small_named,
 )
-from repro.utils.timing import time_fn
 
 
 def suite():

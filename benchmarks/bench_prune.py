@@ -32,6 +32,7 @@ if __name__ == "__main__":
 
 import numpy as np
 
+from benchmarks._artifacts import write_bench_json
 from repro.graphs.generators import barabasi_albert, erdos_renyi, planted_dense
 from repro.stream.buffer import next_pow2
 from repro.stream.delta import DeltaEngine
@@ -186,11 +187,21 @@ def main(smoke: bool = False, strict: bool = False) -> None:
         rows = run(n_nodes=512, batch_size=128, n_batches=4,
                    mixes={"churn": 0.5})
         assert all(r["steady_compiles"] == 0 for r in rows), rows
+        write_bench_json(
+            "prune",
+            {"speedup_max": max(r["speedup"] for r in rows),
+             "steady_compiles": max(r["steady_compiles"] for r in rows)},
+            rows, mode="smoke")
         print("# smoke ok: pruned == unpruned bit-identical, zero "
               "steady-state compiles")
         return
     rows = run()
     assert all(r["steady_compiles"] == 0 for r in rows), "hot path recompiled"
+    write_bench_json(
+        "prune",
+        {"speedup_max": max(r["speedup"] for r in rows),
+         "steady_compiles": max(r["steady_compiles"] for r in rows)},
+        rows)
     pl = [r for r in rows if r["family"] == "power_law"]
     best = max(r["speedup"] for r in pl)
     print(f"# power_law query speedup {best:.1f}x at bit-identical results, "

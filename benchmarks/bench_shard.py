@@ -41,6 +41,7 @@ if __name__ == "__main__":
 import jax
 import numpy as np
 
+from benchmarks._artifacts import write_bench_json
 from benchmarks.bench_prune import FAMILIES, MIXES, _churn_batches, _family_edges
 from repro.stream.buffer import next_pow2
 from repro.stream.delta import DeltaEngine, default_stream_mesh
@@ -155,11 +156,23 @@ def main(smoke: bool = False) -> None:
         rows = run(n_nodes=512, batch_size=128, n_batches=4,
                    mixes={"churn": 0.5})
         assert all(r["steady_compiles"] == 0 for r in rows), rows
+        write_bench_json(
+            "shard",
+            {"steady_compiles": max(r["steady_compiles"] for r in rows),
+             "n_shards": rows[0]["n_shards"],
+             "query_ratio_worst": max(r["query_ratio"] for r in rows)},
+            rows, mode="smoke")
         print(f"# smoke ok: sharded == single-device bit-identical on "
               f"{rows[0]['n_shards']} shard(s), zero steady-state compiles")
         return
     rows = run()
     assert all(r["steady_compiles"] == 0 for r in rows), "hot path recompiled"
+    write_bench_json(
+        "shard",
+        {"steady_compiles": max(r["steady_compiles"] for r in rows),
+         "n_shards": rows[0]["n_shards"],
+         "query_ratio_worst": max(r["query_ratio"] for r in rows)},
+        rows)
     worst = max(r["query_ratio"] for r in rows)
     print(f"# sharded == single-device bit-identical on "
           f"{rows[0]['n_shards']} shard(s); worst query overhead "

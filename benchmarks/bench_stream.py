@@ -19,11 +19,21 @@ peel on every batch to stay current, the incremental path decouples ingest
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+if __name__ == "__main__":
+    # direct invocation (python benchmarks/bench_stream.py): put src/ on the
+    # path before the package imports below (run.py does this for the suite)
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
 
 import jax
 import numpy as np
 
+from benchmarks._artifacts import write_bench_json
 from repro.core import pbahmani
 from repro.graphs.graph import Graph
 from repro.stream.delta import DeltaEngine
@@ -132,12 +142,28 @@ def run(n_nodes: int = 4096, batch_size: int = 512, n_batches: int = 30,
     return res
 
 
-def main():
+def _record(res: dict, mode: str) -> None:
+    write_bench_json(
+        "stream",
+        {"ingest_speedup": res["ingest_speedup"],
+         "steady_compiles": res["steady_compiles"]},
+        [res], mode=mode)
+
+
+def main(smoke: bool = False):
+    if smoke:
+        res = run(n_nodes=512, batch_size=128, n_batches=6)
+        assert res["steady_compiles"] == 0, res
+        _record(res, "smoke")
+        print("# smoke ok: incremental == recompute, zero steady-state "
+              "compiles")
+        return
     res = run()
     assert res["steady_compiles"] == 0, "hot path recompiled!"
+    _record(res, "full")
     print(f"# ingest {res['ingest_speedup']:.1f}x the static rebuild+peel "
           f"path at equal (exact) query density")
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

@@ -1,0 +1,141 @@
+"""Benchmark-trajectory regression gate (ISSUE 4 satellite).
+
+Compares the ``BENCH_<name>.json`` files the benchmark smokes just wrote
+against the committed ``benchmarks/baseline.json`` and fails (exit 1) on a
+regression, so performance changes land measured instead of silent:
+
+  * ``higher``-is-better metrics (speedups — machine-portable ratios, not
+    absolute wall clock) fail below ``(1 - tolerance) * baseline``
+    (default tolerance 25%);
+  * ``zero`` metrics (steady-state compile counts) fail on any non-zero
+    value, regardless of baseline.
+
+``--update`` rewrites the baseline from the current files instead of
+checking (the ``make bench-baseline`` path); metrics present in a BENCH
+file but absent from the baseline are reported and pass (so adding a new
+benchmark doesn't brick CI until its baseline lands).
+
+Usage:
+  python benchmarks/check_regression.py [--dir .] [--tolerance 0.25]
+      [--baseline benchmarks/baseline.json] [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# metric -> direction, per bench. "higher": gated against baseline with
+# tolerance; "zero": hard-fails on non-zero (the no-recompile contract);
+# anything unlisted is recorded in the artifact but not gated (e.g. the
+# sharded query_ratio, a CPU-collective cost model, not a target).
+GATES = {
+    "stream": {"ingest_speedup": "higher", "steady_compiles": "zero"},
+    "prune": {"speedup_max": "higher", "steady_compiles": "zero"},
+    "shard": {"steady_compiles": "zero"},
+    "tenants": {"fused_speedup_16": "higher", "steady_compiles": "zero"},
+}
+
+
+def load_bench_files(directory: str) -> dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        out[payload["bench"]] = payload
+    return out
+
+
+def check(benches: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    failures = []
+    for name, gates in GATES.items():
+        payload = benches.get(name)
+        if payload is None:
+            failures.append(f"{name}: BENCH_{name}.json missing — did the "
+                            f"smoke run?")
+            continue
+        metrics = payload.get("metrics", {})
+        base = baseline.get(name, {})
+        for metric, direction in gates.items():
+            cur = metrics.get(metric)
+            if cur is None:
+                failures.append(f"{name}.{metric}: missing from BENCH file")
+                continue
+            if direction == "zero":
+                if cur != 0:
+                    failures.append(
+                        f"{name}.{metric}: {cur} != 0 (steady-state "
+                        f"recompile — the hot-path contract is broken)")
+                else:
+                    print(f"ok   {name}.{metric} = 0")
+                continue
+            ref = base.get(metric)
+            if ref is None:
+                print(f"note {name}.{metric} = {cur:.3f} (no baseline — "
+                      f"run `make bench-baseline` to gate it)")
+                continue
+            floor = (1.0 - tolerance) * ref
+            if cur < floor:
+                failures.append(
+                    f"{name}.{metric}: {cur:.3f} < {floor:.3f} "
+                    f"(> {tolerance:.0%} regression vs baseline {ref:.3f})")
+            else:
+                print(f"ok   {name}.{metric} = {cur:.3f} "
+                      f"(baseline {ref:.3f}, floor {floor:.3f})")
+    return failures
+
+
+def update_baseline(benches: dict, path: str) -> None:
+    baseline = {}
+    for name, gates in GATES.items():
+        payload = benches.get(name)
+        if payload is None:
+            print(f"note {name}: no BENCH file, baseline entry skipped")
+            continue
+        entry = {m: payload["metrics"][m] for m, d in gates.items()
+                 if d == "higher" and m in payload.get("metrics", {})}
+        if entry:
+            baseline[name] = {k: round(float(v), 3)
+                              for k, v in entry.items()}
+    with open(path, "w") as f:
+        json.dump(baseline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# baseline written to {path}")
+
+
+def main(argv=None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json files")
+    ap.add_argument("--baseline",
+                    default=os.path.join(here, "baseline.json"))
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current BENCH files")
+    args = ap.parse_args(argv)
+
+    benches = load_bench_files(args.dir)
+    if args.update:
+        update_baseline(benches, args.baseline)
+        return 0
+    baseline = {}
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    failures = check(benches, baseline, args.tolerance)
+    for msg in failures:
+        print(f"FAIL {msg}", file=sys.stderr)
+    if failures:
+        print(f"# regression gate FAILED ({len(failures)} failure(s))",
+              file=sys.stderr)
+        return 1
+    print("# regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,6 @@ artifacts (baseline + optimized) and splice them into EXPERIMENTS.md."""
 from __future__ import annotations
 
 import json
-import sys
 
 from benchmarks.bench_roofline import analyze
 

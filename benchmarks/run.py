@@ -8,6 +8,7 @@
   bench_stream   — streaming subsystem: ingest rate + query vs recompute
   bench_prune    — candidate pruning: pruned vs unpruned query latency
   bench_shard    — sharded streaming: shard_map engine vs single-device
+  bench_tenants  — fused multi-tenant: batched peels vs sequential dispatch
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import time
 def main() -> None:
     from benchmarks import (bench_density, bench_epsilon, bench_kernels,
                             bench_prune, bench_roofline, bench_scaling,
-                            bench_shard, bench_stream)
+                            bench_shard, bench_stream, bench_tenants)
     for name, fn in [
         ("bench_density (paper Table 3)", bench_density.main),
         ("bench_epsilon (paper Table 2)", bench_epsilon.run),
@@ -27,6 +28,7 @@ def main() -> None:
         ("bench_stream (dynamic graphs)", bench_stream.main),
         ("bench_prune (candidate pruning)", bench_prune.main),
         ("bench_shard (sharded streaming)", bench_shard.main),
+        ("bench_tenants (fused multi-tenant)", bench_tenants.main),
     ]:
         print(f"\n=== {name} ===")
         t0 = time.time()

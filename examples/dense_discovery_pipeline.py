@@ -17,7 +17,6 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core import cbds_np, pbahmani_np

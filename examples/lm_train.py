@@ -7,7 +7,6 @@ The --arch flag picks whose SMOKE config to train (the full configs are
 pod-scale; the loop/launcher code path is identical).
 """
 import argparse
-import os
 import sys
 import tempfile
 

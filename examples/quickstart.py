@@ -10,8 +10,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
 from repro.core import cbds_p, charikar, exact_densest, pbahmani
 from repro.graphs.generators import planted_dense
 from repro.graphs.io import load_snap_edgelist

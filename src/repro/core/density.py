@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def degrees_from_coo(src: jax.Array, n_nodes: int) -> jax.Array:

@@ -442,9 +442,7 @@ def _staged_peel(
     )
 
 
-@partial(jax.jit, static_argnames=(
-    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2"))
-def _bucket_peel_jit(
+def _bucket_peel_body(
     b_src: jax.Array,
     b_dst: jax.Array,
     n_v: jax.Array,
@@ -453,7 +451,6 @@ def _bucket_peel_jit(
     passes: jax.Array,
     eps: float,
     bucket_v: int,
-    bucket_e: int,
     bucket_v2: int,
     bucket_e2: int,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -478,6 +475,37 @@ def _bucket_peel_jit(
         b_src, b_dst, bucket_v, eps, bucket_v2, bucket_e2,
     )
     return final.best_density, final.best_mask, final.passes
+
+
+@partial(jax.jit, static_argnames=(
+    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2"))
+def _bucket_peel_jit(
+    b_src, b_dst, n_v, n_e, best_density, passes,
+    eps: float, bucket_v: int, bucket_e: int, bucket_v2: int, bucket_e2: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    del bucket_e  # cache-key only: b_src already carries the lane shape
+    return _bucket_peel_body(b_src, b_dst, n_v, n_e, best_density, passes,
+                             eps, bucket_v, bucket_v2, bucket_e2)
+
+
+@partial(jax.jit, static_argnames=(
+    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2"))
+def _batched_bucket_peel_jit(
+    b_src, b_dst, n_v, n_e, best_density, passes,
+    eps: float, bucket_v: int, bucket_e: int, bucket_v2: int, bucket_e2: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused multi-tenant bucket peel (ISSUE 4): vmap of the single-tenant
+    ``_bucket_peel_body`` over a leading tenant axis of same-bucket
+    compacted subproblems. The batched ``while_loop`` freezes converged
+    lanes through ``select`` and every op is per-lane (exact int32 segment
+    sums, elementwise f32 scalars), so each lane's triple is bit-identical
+    to ``_bucket_peel_jit`` on its row; an all-sentinel pad lane (n_v = 0)
+    converges at entry. One executable per (group, bucket) shape."""
+    del bucket_e
+    return jax.vmap(
+        lambda s, d, v, e, bd, p: _bucket_peel_body(
+            s, d, v, e, bd, p, eps, bucket_v, bucket_v2, bucket_e2)
+    )(b_src, b_dst, n_v, n_e, best_density, passes)
 
 
 @lru_cache(maxsize=None)
@@ -636,31 +664,46 @@ def compact_candidates(
     return perm, b_src, b_dst, 2 * idx.size
 
 
-def pruned_peel_host(
+@dataclass
+class PrunedDispatch:
+    """A host-prepared compacted subproblem awaiting its device bucket peel.
+
+    Produced by :func:`prepare_pruned_peel`, consumed by
+    :func:`merge_pruned_peel` once the device returns the bucket triple.
+    The split exists so the fused multi-tenant layer (stream/fused.py) can
+    prepare many tenants, group the dispatches by ``plan.buckets`` — plans
+    grouped by bucket shape share one vmapped executable — and run each
+    group as a single ``_batched_bucket_peel_jit`` call."""
+
+    b_src: np.ndarray        # [bucket_e] sentinel(=bucket_v)-padded COO
+    b_dst: np.ndarray
+    n_v1: int                # pass-0 survivor count
+    n_e1: int                # surviving undirected edges
+    best_d1: np.float32      # best density after the host pass-0/1 merge
+    eps: float
+    plan: PrunePlan          # may have regrown/shrunk relative to the input
+    perm: np.ndarray         # full id -> compact id (valid where ``a1``)
+    a1: np.ndarray           # pass-0 survivor mask (full vertex space)
+    active0: np.ndarray      # pass-0 live mask
+    better1: bool            # host pass-1 density beat pass-0's
+    observed: tuple[int, int]  # (n_v1, lanes1) handoff for bucket sizing
+
+
+def prepare_pruned_peel(
     u: np.ndarray,
     v: np.ndarray,
     deg: np.ndarray,
     n_edges: int,
     eps: float,
     plan: PrunePlan,
-    mesh=None,
-) -> tuple[float, np.ndarray, int, tuple[int, int], PrunePlan] | None:
-    """The full pruned query: host pass-0 + compaction, device bucket peel,
-    host merge. ``u, v`` are undirected host slot arrays (sentinel-padded),
-    ``deg`` the exact int32 degree array (len == vertex space == sentinel).
+) -> (PrunedDispatch
+      | tuple[float, np.ndarray, int, tuple[int, int], PrunePlan] | None):
+    """Host half of the pruned query: pass-0 simulation + compaction.
 
-    Returns (density, mask, passes, observed_handoff, plan) — ``plan`` may
-    have grown if the observed survivor set missed the given buckets, or
-    *shrunk* if the graph contracted past the hysteresis (the host sees the
-    exact size before dispatch, so no query is ever wasted; bit-identity
-    holds for every bucket choice). Returns ``None`` when the survivor set
-    cannot fit any legal bucket (pruning would not pay off); the caller
-    runs its unpruned path.
-
-    With ``mesh`` the bucket peel runs sharded: bucket lanes partitioned
-    over the mesh devices via ``_make_sharded_bucket_peel`` — same triple,
-    one tenant's candidate set spanning the mesh.
-    """
+    Returns a :class:`PrunedDispatch` ready for the device bucket peel, or
+    the finished result tuple directly for the trivial empty-graph case, or
+    ``None`` when the survivor set fits no legal bucket (the caller runs
+    its unpruned path)."""
     n_nodes = deg.shape[0]
     active0, a1, n_v0, rho0 = _pass0_host(deg, n_edges, eps)
     if n_v0 == 0:
@@ -692,12 +735,63 @@ def pruned_peel_host(
             if n_v1 > 0 else np.float32(0.0))
     better1 = bool(rho1 > rho0)
     best_d1 = rho1 if better1 else rho0
+    return PrunedDispatch(
+        b_src=b_src, b_dst=b_dst, n_v1=n_v1, n_e1=n_e1,
+        best_d1=np.float32(best_d1), eps=float(eps), plan=plan, perm=perm,
+        a1=a1, active0=active0, better1=better1, observed=(n_v1, lanes1),
+    )
 
+
+def merge_pruned_peel(
+    pd: PrunedDispatch, d_b, mask_b, passes_b
+) -> tuple[float, np.ndarray, int, tuple[int, int], PrunePlan]:
+    """Host merge of the device bucket triple back into the full vertex
+    space — the exact strict-``>`` merge of the unpruned trajectory."""
+    density = np.float32(d_b)
+    passes = int(passes_b)
+    if density > pd.best_d1:  # strict >: earliest best wins, as unpruned
+        mask_b = np.asarray(mask_b)
+        mask = pd.a1 & mask_b[np.minimum(pd.perm, pd.plan.bucket_v - 1)]
+    else:
+        mask = pd.a1 if pd.better1 else pd.active0
+    return float(density), mask, passes, pd.observed, pd.plan
+
+
+def pruned_peel_host(
+    u: np.ndarray,
+    v: np.ndarray,
+    deg: np.ndarray,
+    n_edges: int,
+    eps: float,
+    plan: PrunePlan,
+    mesh=None,
+) -> tuple[float, np.ndarray, int, tuple[int, int], PrunePlan] | None:
+    """The full pruned query: host pass-0 + compaction, device bucket peel,
+    host merge. ``u, v`` are undirected host slot arrays (sentinel-padded),
+    ``deg`` the exact int32 degree array (len == vertex space == sentinel).
+
+    Returns (density, mask, passes, observed_handoff, plan) — ``plan`` may
+    have grown if the observed survivor set missed the given buckets, or
+    *shrunk* if the graph contracted past the hysteresis (the host sees the
+    exact size before dispatch, so no query is ever wasted; bit-identity
+    holds for every bucket choice). Returns ``None`` when the survivor set
+    cannot fit any legal bucket (pruning would not pay off); the caller
+    runs its unpruned path.
+
+    With ``mesh`` the bucket peel runs sharded: bucket lanes partitioned
+    over the mesh devices via ``_make_sharded_bucket_peel`` — same triple,
+    one tenant's candidate set spanning the mesh.
+    """
+    prep = prepare_pruned_peel(u, v, deg, n_edges, eps, plan)
+    if prep is None or isinstance(prep, tuple):
+        return prep
+    pd = prep
+    plan = pd.plan
     if mesh is None:
         d_b, mask_b, passes_b = _bucket_peel_jit(
-            jnp.asarray(b_src), jnp.asarray(b_dst),
-            jnp.asarray(n_v1, jnp.int32), jnp.asarray(n_e1, jnp.int32),
-            jnp.asarray(best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
+            jnp.asarray(pd.b_src), jnp.asarray(pd.b_dst),
+            jnp.asarray(pd.n_v1, jnp.int32), jnp.asarray(pd.n_e1, jnp.int32),
+            jnp.asarray(pd.best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
             float(eps), *plan.buckets,
         )
     else:
@@ -709,18 +803,11 @@ def pruned_peel_host(
         run = _make_sharded_bucket_peel(mesh, float(eps), *plan.buckets)
         sh = edge_sharding(mesh)
         d_b, mask_b, passes_b = run(
-            jax.device_put(b_src, sh), jax.device_put(b_dst, sh),
-            jnp.asarray(n_v1, jnp.int32), jnp.asarray(n_e1, jnp.int32),
-            jnp.asarray(best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
+            jax.device_put(pd.b_src, sh), jax.device_put(pd.b_dst, sh),
+            jnp.asarray(pd.n_v1, jnp.int32), jnp.asarray(pd.n_e1, jnp.int32),
+            jnp.asarray(pd.best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
         )
-    density = np.float32(d_b)
-    passes = int(passes_b)
-    if density > best_d1:  # strict >: earliest best wins, as unpruned
-        mask_b = np.asarray(mask_b)
-        mask = a1 & mask_b[np.minimum(perm, plan.bucket_v - 1)]
-    else:
-        mask = a1 if better1 else active0
-    return float(density), mask, passes, (n_v1, lanes1), plan
+    return merge_pruned_peel(pd, d_b, mask_b, passes_b)
 
 
 def plan_for_graph(
@@ -778,6 +865,9 @@ def pbahmani_pruned(
 
 __all__ = [
     "PrunePlan",
+    "PrunedDispatch",
+    "prepare_pruned_peel",
+    "merge_pruned_peel",
     "build_plan",
     "maybe_shrink_plan",
     "make_sharded_plan",

@@ -12,6 +12,7 @@ pass ``presorted=False`` to sort on the fly.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from functools import partial
 
@@ -33,8 +34,6 @@ _INTERPRET = os.environ.get("PALLAS_INTERPRET", "1") != "0"
 # turns it into a reduce-scatter (per-device payload /n_dev); the gathers
 # where full rows are needed are D-sized and far cheaper.
 # ---------------------------------------------------------------------------
-import contextlib
-
 _SEG_OUT_HINT: list = []  # stack of (mesh, axes, min_segments)
 
 

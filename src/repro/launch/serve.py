@@ -13,9 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import (
-    TransformerConfig, decode_step, forward, init_cache,
-)
+from repro.models.transformer import TransformerConfig, decode_step, forward
 
 
 @dataclass

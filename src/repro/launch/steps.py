@@ -22,7 +22,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
@@ -32,7 +31,7 @@ from repro.models import gnn as gnn_mod
 from repro.models import recsys as rec_mod
 from repro.models.layers import ShardCtx
 from repro.models.transformer import (
-    TransformerConfig, cache_specs, decode_step, forward, init_cache,
+    TransformerConfig, decode_step, forward, init_cache,
     init_params, loss_fn, param_specs, param_specs_zero3,
 )
 from repro.optim import adafactor, adamw, sgdm

@@ -22,7 +22,6 @@ library; it is the documented hardware adaptation, not a fidelity claim.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ dtype policy: params are stored in ``cfg.param_dtype``; matmuls run in
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

@@ -25,7 +25,6 @@ adaptation DESIGN.md §2 applies to the paper's peeling sets.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax

@@ -19,8 +19,7 @@ FSDP over ``data``, EP for experts).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax
@@ -31,7 +30,7 @@ from repro.models.layers import (
     ShardCtx, NO_SHARD, apply_rope, cross_entropy, flash_attention, rms_norm,
     swiglu,
 )
-from repro.models.moe import MoEConfig, init_moe_params, moe_dense, moe_ep
+from repro.models.moe import MoEConfig, init_moe_params, moe_ep
 from repro.models.moe_tp import moe_tp
 
 

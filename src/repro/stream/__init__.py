@@ -3,10 +3,14 @@
 #
 #   buffer.py   — fixed-capacity sentinel-padded edge buffer (pow-2 growth)
 #   delta.py    — incremental maintenance engine (degree deltas + warm peel)
+#   fused.py    — fused multi-tenant execution (vmap-batched bucket peels)
 #   registry.py — multi-tenant named-graph registry (capacity bucketing, LRU)
 #   service.py  — batch query front-end with latency/compile metrics
 from repro.stream.buffer import EdgeBuffer
 from repro.stream.delta import DeltaEngine, QueryResult, UpdateStats
+from repro.stream.fused import (
+    FusedEngine, FusedPool, TenantBatch, ingest_group, query_group,
+)
 from repro.stream.registry import GraphRegistry, TenantStats
 from repro.stream.service import StreamService, ServiceResponse
 
@@ -15,6 +19,11 @@ __all__ = [
     "DeltaEngine",
     "QueryResult",
     "UpdateStats",
+    "FusedEngine",
+    "FusedPool",
+    "TenantBatch",
+    "ingest_group",
+    "query_group",
     "GraphRegistry",
     "TenantStats",
     "StreamService",

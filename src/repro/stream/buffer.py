@@ -221,6 +221,22 @@ class EdgeBuffer:
         dst = np.concatenate([self._v, self._u])
         return src, dst
 
+    def resident_state(self, node_capacity: int) -> tuple[
+            np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, deg) — the exact device-resident state a full resync
+        uploads: the symmetric COO view plus the int32 degree histogram over
+        the (pow-2 padded) vertex space. One code path for both the
+        per-tenant engine (``DeltaEngine._resync_device``) and the fused
+        multi-tenant lane writes (stream/fused.py), so a fused lane's
+        post-resync state is bit-identical to an unbatched engine's by
+        construction. Pair it with ``generation`` to track lane staleness:
+        a lane whose recorded generation trails the buffer's must re-upload
+        through this view before the next fused program runs."""
+        src, dst = self.device_view()
+        valid = src[src < self.sentinel]
+        deg = np.bincount(valid, minlength=node_capacity)
+        return src, dst, deg[:node_capacity].astype(np.int32)
+
     def to_graph(self) -> Graph:
         """Materialize an immutable Graph (compacted) — the oracle view."""
         if not self._slot:

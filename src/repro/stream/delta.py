@@ -82,14 +82,48 @@ from repro.core.distributed import (
 )
 from repro.core.pbahmani import PeelState, _pbahmani_jit, pbahmani_pass
 from repro.core.prune import (
-    PrunePlan, _bucket_peel_jit, _plan_jit, build_plan, make_sharded_plan,
-    pruned_peel_host,
+    PrunePlan, _batched_bucket_peel_jit, _bucket_peel_jit, _plan_jit,
+    build_plan, make_sharded_plan, pruned_peel_host,
 )
 from repro.stream.buffer import EdgeBuffer, MIN_CAPACITY, next_pow2
 from repro.utils.compat import make_mesh_auto, shard_map_compat
 
 MIN_BATCH = 64  # smallest padded update-batch shape (pow-2 buckets above)
 DELETE_STALENESS_WEIGHT = 3.0  # an all-delete batch ages the epoch 4x
+
+
+def _build_batch_row(ins, ins_slots, dele, del_slots, capacity: int,
+                     sentinel: int, b_floor: int = MIN_BATCH):
+    """Pad one effective update batch into the fixed-shape scatter row the
+    jitted apply consumes: pow-2 length, OOB slot indices and zero weights
+    in the padding lanes. Shared by the per-tenant dispatch and the fused
+    multi-tenant ingest (stream/fused.py), where rows from many tenants
+    stack into one [T, B] program."""
+    n = ins.shape[0] + dele.shape[0]
+    b = max(next_pow2(max(n, 1)), b_floor)
+    slots = np.full(b, 2 * capacity, np.int32)  # OOB pad
+    su = np.full(b, sentinel, np.int32)
+    sv = np.full(b, sentinel, np.int32)
+    du = np.full(b, sentinel, np.int32)
+    dv = np.full(b, sentinel, np.int32)
+    w = np.zeros(b, np.int32)
+    # deletes first; an insert reusing a freed slot must win the scatter,
+    # so drop the delete's slot write (its degree delta and the insert's
+    # are independent — keyed on endpoints, not slots)
+    m = dele.shape[0]
+    if m:
+        keep = ~np.isin(del_slots, ins_slots)
+        dslots = np.where(keep, del_slots, 2 * capacity)
+        slots[:m] = dslots
+        du[:m], dv[:m] = dele[:, 0], dele[:, 1]
+        w[:m] = -1
+    k = ins.shape[0]
+    if k:
+        slots[m : m + k] = ins_slots
+        su[m : m + k], sv[m : m + k] = ins[:, 0], ins[:, 1]
+        du[m : m + k], dv[m : m + k] = ins[:, 0], ins[:, 1]
+        w[m : m + k] = 1
+    return slots, su, sv, du, dv, w
 
 
 @lru_cache(maxsize=None)
@@ -181,8 +215,7 @@ def _make_sharded_apply(mesh, n_nodes: int):
     return run
 
 
-@partial(jax.jit, static_argnames=("n_nodes",))
-def _apply_batch_jit(
+def _apply_batch_body(
     src: jax.Array,
     dst: jax.Array,
     deg: jax.Array,
@@ -194,7 +227,10 @@ def _apply_batch_jit(
     w: jax.Array,       # int32 [B] +1 insert / -1 delete / 0 padding
     n_nodes: int,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One update batch: edge-slot scatter + signed degree histogram."""
+    """One update batch: edge-slot scatter + signed degree histogram.
+    Shared by the single-tenant jit and the vmapped multi-tenant jit — an
+    all-padding batch row (w=0, OOB slots) is an exact no-op, which is what
+    lets idle lanes of a fused bucket ride along for free."""
     cap = src.shape[0] // 2
     src = src.at[slots].set(su, mode="drop").at[slots + cap].set(sv, mode="drop")
     dst = dst.at[slots].set(sv, mode="drop").at[slots + cap].set(su, mode="drop")
@@ -204,8 +240,24 @@ def _apply_batch_jit(
     return src, dst, deg
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "eps"))
-def _warm_peel_jit(
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _apply_batch_jit(src, dst, deg, slots, su, sv, du, dv, w, n_nodes: int):
+    return _apply_batch_body(src, dst, deg, slots, su, sv, du, dv, w, n_nodes)
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _batched_apply_jit(src, dst, deg, slots, su, sv, du, dv, w, n_nodes: int):
+    """Fused multi-tenant ingest (ISSUE 4): one vmapped scatter+histogram
+    over the leading tenant axis ([T, 2*cap] slots, [T, B] batch rows).
+    Per-lane arithmetic is the exact ``_apply_batch_body`` recurrence, so
+    each lane's device state is bit-identical to an unbatched engine's."""
+    return jax.vmap(
+        lambda a, b, c, d, e, f, g, h, i: _apply_batch_body(
+            a, b, c, d, e, f, g, h, i, n_nodes)
+    )(src, dst, deg, slots, su, sv, du, dv, w)
+
+
+def _warm_peel_body(
     src: jax.Array,
     dst: jax.Array,
     deg: jax.Array,
@@ -241,6 +293,28 @@ def _warm_peel_jit(
         warm_v > 0, warm_e.astype(jnp.float32) / jnp.maximum(warm_v, 1), 0.0
     )
     return final, warm_rho
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+def _warm_peel_jit(src, dst, deg, n_edges, prev_mask, n_nodes: int, eps: float):
+    return _warm_peel_body(src, dst, deg, n_edges, prev_mask, n_nodes, eps)
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+def _batched_warm_peel_jit(
+    src, dst, deg, n_edges, prev_mask, n_nodes: int, eps: float
+) -> tuple[PeelState, jax.Array]:
+    """Fused multi-tenant warm peel (ISSUE 4): vmap of ``_warm_peel_body``
+    over the leading tenant axis. jax batches the inner ``while_loop`` by
+    running the pass body while ANY lane is live and freezing converged
+    lanes through ``select`` — the per-tenant early-exit mask. Every op in
+    the pass is per-lane (elementwise f32 scalars, exact int32 segment
+    sums), so each lane's (density, mask, passes) triple is bit-identical
+    to the unbatched ``_warm_peel_jit``; an empty lane (deg == 0) converges
+    at pass 0 and never serializes the batch."""
+    return jax.vmap(
+        lambda s, d, g, ne, pm: _warm_peel_body(s, d, g, ne, pm, n_nodes, eps)
+    )(src, dst, deg, n_edges, prev_mask)
 
 
 @dataclass
@@ -350,10 +424,7 @@ class DeltaEngine:
         """Full O(|E|) upload — on first use, regrow, or epoch compaction.
         Sharded engines place the slot arrays partitioned over the mesh and
         the degree array replicated, so no later call ever reshards."""
-        src, dst = self.buffer.device_view()
-        valid = src[src < self.sentinel]
-        deg = np.bincount(valid, minlength=self.node_capacity)
-        deg = deg[: self.node_capacity].astype(np.int32)
+        src, dst, deg = self.buffer.resident_state(self.node_capacity)
         if self.mesh is not None:
             self._src, self._dst, self._deg, self._prev_mask = (
                 _make_sharded_resync(self.mesh)(
@@ -393,47 +464,13 @@ class DeltaEngine:
             self._resync_device()
             self._plan = None
         else:
-            n = ins.shape[0] + dele.shape[0]
             # pow-2 batch pad; sharded engines also need the batch divisible
             # into per-device histogram slices (n_shards is pow-2)
-            b = max(next_pow2(max(n, 1)), MIN_BATCH, self.n_shards)
-            sent = self.sentinel
-            slots = np.full(b, 2 * self.buffer.capacity, np.int32)  # OOB pad
-            su = np.full(b, sent, np.int32)
-            sv = np.full(b, sent, np.int32)
-            du = np.full(b, sent, np.int32)
-            dv = np.full(b, sent, np.int32)
-            w = np.zeros(b, np.int32)
-            # deletes first; an insert reusing a freed slot must win the
-            # scatter, so drop the delete's slot write (its degree delta and
-            # the insert's are independent — keyed on endpoints, not slots)
-            m = dele.shape[0]
-            if m:
-                keep = ~np.isin(del_slots, ins_slots)
-                dslots = np.where(keep, del_slots, 2 * self.buffer.capacity)
-                slots[:m] = dslots
-                du[:m], dv[:m] = dele[:, 0], dele[:, 1]
-                w[:m] = -1
-            k = ins.shape[0]
-            if k:
-                slots[m : m + k] = ins_slots
-                su[m : m + k], sv[m : m + k] = ins[:, 0], ins[:, 1]
-                du[m : m + k], dv[m : m + k] = ins[:, 0], ins[:, 1]
-                w[m : m + k] = 1
-            if self.mesh is not None:
-                apply_fn = _make_sharded_apply(self.mesh, self.node_capacity)
-                self._src, self._dst, self._deg = apply_fn(
-                    self._src, self._dst, self._deg,
-                    jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
-                    jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
-                )
-            else:
-                self._src, self._dst, self._deg = _apply_batch_jit(
-                    self._src, self._dst, self._deg,
-                    jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
-                    jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
-                    self.node_capacity,
-                )
+            row = _build_batch_row(
+                ins, ins_slots, dele, del_slots, self.buffer.capacity,
+                self.sentinel, b_floor=max(MIN_BATCH, self.n_shards))
+            b = row[0].shape[0]
+            self._dispatch_batch(*row)
             self.metrics.shape_buckets.add((2 * self.buffer.capacity, b))
 
         # staleness ages faster on delete-heavy batches: tombstone holes are
@@ -454,6 +491,25 @@ class DeltaEngine:
             regrew=regrew,
             latency_ms=ms,
         )
+
+    def _dispatch_batch(self, slots, su, sv, du, dv, w) -> None:
+        """Apply one padded scatter row to the device-resident state. The
+        fused multi-tenant engine overrides this to route the row into its
+        bucket's stacked [T, ...] arrays (stream/fused.py)."""
+        if self.mesh is not None:
+            apply_fn = _make_sharded_apply(self.mesh, self.node_capacity)
+            self._src, self._dst, self._deg = apply_fn(
+                self._src, self._dst, self._deg,
+                jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
+                jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
+            )
+        else:
+            self._src, self._dst, self._deg = _apply_batch_jit(
+                self._src, self._dst, self._deg,
+                jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
+                jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
+                self.node_capacity,
+            )
 
     # -- candidate pruning (core/prune.py) ----------------------------------
     def _rebuild_plan(self) -> None:
@@ -507,7 +563,16 @@ class DeltaEngine:
             self.metrics.n_prune_fallbacks += 1
             self._plan = dc_replace(self._plan, enabled=False)
             return None
-        density, mask, passes, observed, plan = res
+        return self._absorb_pruned_result(*res)
+
+    def _absorb_pruned_result(
+        self, density: float, mask: np.ndarray, passes: int,
+        observed: tuple[int, int], plan: PrunePlan,
+    ) -> tuple[float, np.ndarray, int]:
+        """Post-dispatch bookkeeping for one pruned result (plan regrow /
+        shrink accounting, prev-mask warm seed, metrics). Shared with the
+        fused multi-tenant flush, which merges many tenants' batched bucket
+        peels through the same path (stream/fused.py)."""
         self._last_handoff = observed
         if plan is not self._plan:  # in-flight bucket regrow or shrink
             if (plan.bucket_v < self._plan.bucket_v
@@ -683,9 +748,17 @@ class DeltaEngine:
         covers sharded tenants."""
         total = 0
         for fn in (_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit,
-                   _bucket_peel_jit, _plan_jit):
+                   _bucket_peel_jit, _plan_jit, _batched_apply_jit,
+                   _batched_warm_peel_jit, _batched_bucket_peel_jit):
             total += fn._cache_size()
         for fn in SHARDED_JITS:
+            total += fn._cache_size()
+        # fused lane-management entry points (stream/fused.py) — imported
+        # lazily to avoid a module cycle; if the fused layer was never
+        # loaded its caches are empty anyway
+        from repro.stream import fused as _fused
+
+        for fn in _fused.FUSED_JITS:
             total += fn._cache_size()
         return total
 
@@ -699,4 +772,5 @@ class DeltaEngine:
 
 
 __all__ = ["DeltaEngine", "QueryResult", "UpdateStats", "EngineMetrics",
-           "MIN_BATCH", "DELETE_STALENESS_WEIGHT", "default_stream_mesh"]
+           "MIN_BATCH", "DELETE_STALENESS_WEIGHT", "default_stream_mesh",
+           "_batched_apply_jit", "_batched_warm_peel_jit"]

@@ -25,6 +25,7 @@ from dataclasses import dataclass
 
 from repro.stream.buffer import MIN_CAPACITY, next_pow2
 from repro.stream.delta import DeltaEngine
+from repro.stream.fused import FusedEngine, FusedPool
 
 
 @dataclass
@@ -60,6 +61,12 @@ class TenantStats:
     n_buffer_shrinks: int = 0
     n_bucket_shrinks: int = 0
     tombstone_fraction: float = 0.0
+    # fused multi-tenant execution (stream/fused.py): which lane of which
+    # bucket stack this tenant's device state lives in — same-bucket
+    # tenants answer queries through one vmapped program per flush
+    fused: bool = False
+    lane: int = -1
+    batch_lanes: int = 0
 
 
 class GraphRegistry:
@@ -67,7 +74,7 @@ class GraphRegistry:
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
                  refresh_every: int = 32, pruned: bool = True,
-                 sharded: bool = False, mesh=None):
+                 sharded: bool = False, mesh=None, fused: bool = False):
         if max_tenants <= 0:
             raise ValueError("max_tenants must be >= 1")
         self.max_tenants = int(max_tenants)
@@ -79,6 +86,11 @@ class GraphRegistry:
         # executables (the lru-cached factories key on the mesh object)
         self.default_sharded = bool(sharded)
         self.mesh = mesh
+        # one fused pool for the whole registry: fused tenants that bucket
+        # together share a lane stack, so bucket membership is a batch
+        # roster (join/evict = row swap) rather than a compile event
+        self.default_fused = bool(fused)
+        self.fused_pool = FusedPool()
         self._engines: OrderedDict[str, DeltaEngine] = OrderedDict()
         self.evictions = 0
 
@@ -92,6 +104,7 @@ class GraphRegistry:
         refresh_every: int | None = None,
         pruned: bool | None = None,
         sharded: bool | None = None,
+        fused: bool | None = None,
     ) -> DeltaEngine:
         """Create (or return the existing) engine for ``name``.
 
@@ -100,40 +113,57 @@ class GraphRegistry:
         its edge slots span every device instead of one chip, at identical
         query results (tests/test_shard.py parity oracle).
 
+        ``fused=True`` opts the tenant into the fused multi-tenant layer
+        (stream/fused.py): its device state becomes a lane of the bucket's
+        stacked arrays and same-bucket queries batch into one vmapped
+        program, at bit-identical per-tenant results. Fused and sharded
+        are mutually exclusive for now (ROADMAP follow-up).
+
         Re-registering with the same logical config is an idempotent no-op;
         a conflicting config raises rather than silently handing back an
         engine sized for a different graph."""
+        want_eps = self.default_eps if eps is None else float(eps)
+        want_sharded = (self.default_sharded if sharded is None
+                        else bool(sharded))
+        want_fused = self.default_fused if fused is None else bool(fused)
+        if want_fused and want_sharded:
+            raise ValueError(
+                "fused multi-tenant execution does not support sharded "
+                "tenants yet; register with one of fused/sharded")
         if name in self._engines:
             eng = self.get(name)
-            want_eps = self.default_eps if eps is None else float(eps)
-            want_sharded = (self.default_sharded if sharded is None
-                            else bool(sharded))
+            is_fused = isinstance(eng, FusedEngine)
             if (eng.n_nodes != int(n_nodes) or eng.eps != want_eps
-                    or eng.sharded != want_sharded):
+                    or eng.sharded != want_sharded
+                    or is_fused != want_fused):
                 raise ValueError(
                     f"tenant {name!r} already registered with "
                     f"n_nodes={eng.n_nodes}, eps={eng.eps}, "
-                    f"sharded={eng.sharded}; got n_nodes={n_nodes}, "
-                    f"eps={want_eps}, sharded={want_sharded}"
+                    f"sharded={eng.sharded}, fused={is_fused}; got "
+                    f"n_nodes={n_nodes}, eps={want_eps}, "
+                    f"sharded={want_sharded}, fused={want_fused}"
                 )
             return eng
-        eng = DeltaEngine(
+        kwargs = dict(
             n_nodes=n_nodes,
-            eps=self.default_eps if eps is None else float(eps),
+            eps=want_eps,
             capacity=next_pow2(capacity),
             refresh_every=(
                 self.default_refresh_every if refresh_every is None
                 else int(refresh_every)
             ),
             pruned=self.default_pruned if pruned is None else bool(pruned),
-            sharded=(self.default_sharded if sharded is None
-                     else bool(sharded)),
-            mesh=self.mesh,
         )
+        if want_fused:
+            eng = FusedEngine(name, self.fused_pool, **kwargs)
+        else:
+            eng = DeltaEngine(sharded=want_sharded, mesh=self.mesh, **kwargs)
         self._engines[name] = eng
         self._engines.move_to_end(name)
         while len(self._engines) > self.max_tenants:
-            self._engines.popitem(last=False)
+            _, evicted = self._engines.popitem(last=False)
+            if isinstance(evicted, FusedEngine):
+                evicted.release()  # free the lane: a cheap row swap
             self.evictions += 1
         return eng
 
@@ -145,7 +175,14 @@ class GraphRegistry:
         return eng
 
     def remove(self, name: str) -> None:
-        self._engines.pop(name, None)
+        eng = self._engines.pop(name, None)
+        if isinstance(eng, FusedEngine):
+            eng.release()
+
+    def engines(self) -> dict[str, DeltaEngine]:
+        """Name -> engine snapshot (no LRU touch) for grouped operations —
+        the fused query/ingest helpers take this mapping directly."""
+        return dict(self._engines)
 
     def __contains__(self, name: str) -> bool:
         return name in self._engines
@@ -185,6 +222,11 @@ class GraphRegistry:
             n_buffer_shrinks=m.n_buffer_shrinks,
             n_bucket_shrinks=m.n_bucket_shrinks,
             tombstone_fraction=eng.buffer.tombstone_fraction,
+            fused=isinstance(eng, FusedEngine),
+            lane=(eng._lane if isinstance(eng, FusedEngine)
+                  and eng._lane is not None else -1),
+            batch_lanes=(eng.batch.lanes if isinstance(eng, FusedEngine)
+                         and eng.batch is not None else 0),
         )
 
     def all_stats(self) -> list[TenantStats]:

@@ -8,11 +8,21 @@ per request — see tests/test_stream.py).
 
 Operations
   ``apply_updates``  ingest one insert/delete batch for a tenant
+  ``ingest_many``    ingest many tenants' batches (one fused scatter per
+                     capacity bucket for fused tenants)
   ``density``        oracle-exact densest-subgraph density (warm peel)
   ``membership``     boolean vertex mask of the best subgraph
   ``top_k_densest``  cross-tenant leaderboard (fraud triage: which graph
-                     grew the hottest ring since the last sweep)
+                     grew the hottest ring since the last sweep) — served
+                     from one batched peel per bucket for fused tenants
   ``stats``          per-tenant counters for dashboards
+
+Query coalescing (ISSUE 4): with ``coalesce_window_ms > 0`` callers can
+``submit_density`` instead of ``density`` — requests queue until the window
+expires (checked on the next submit), an explicit ``flush()``, or
+``shutdown()``; same-bucket requests in one flush answer through a single
+vmapped peel (stream/fused.py). ``poll(ticket)`` retrieves a finished
+response. The synchronous ``density`` API is unchanged.
 """
 from __future__ import annotations
 
@@ -24,6 +34,7 @@ import numpy as np
 
 from repro.stream.buffer import MIN_CAPACITY
 from repro.stream.delta import DeltaEngine
+from repro.stream.fused import ingest_group, query_group
 from repro.stream.registry import GraphRegistry
 
 
@@ -51,12 +62,21 @@ class StreamService:
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
                  refresh_every: int = 32, pruned: bool = True,
-                 sharded: bool = False, mesh=None):
+                 sharded: bool = False, mesh=None, fused: bool = False,
+                 coalesce_window_ms: float = 0.0):
         self.registry = GraphRegistry(
             max_tenants=max_tenants, eps=eps, refresh_every=refresh_every,
-            pruned=pruned, sharded=sharded, mesh=mesh,
+            pruned=pruned, sharded=sharded, mesh=mesh, fused=fused,
         )
         self.metrics = ServiceMetrics()
+        # query coalescing: pending (ticket, tenant, t_submit) triples are
+        # flushed together so same-bucket fused tenants share one batched
+        # peel; window <= 0 degenerates to flush-per-submit
+        self.coalesce_window_ms = float(coalesce_window_ms)
+        self._pending: list[tuple[int, str, float]] = []
+        self._results: dict[int, ServiceResponse] = {}
+        self._next_ticket = 0
+        self._closed = False
 
     # -- plumbing -----------------------------------------------------------
     def _respond(self, op: str, tenant: str | None, t0: float,
@@ -113,6 +133,18 @@ class StreamService:
             return self._respond("apply_updates", tenant, t0, error=str(e))
         return self._respond("apply_updates", tenant, t0, value=stats)
 
+    def ingest_many(self, updates: dict) -> ServiceResponse:
+        """Apply many tenants' batches; fused tenants in the same capacity
+        bucket share one ``[T, B]`` scatter program per flush.
+        ``updates`` maps tenant -> (insert, delete)."""
+        t0 = time.perf_counter()
+        try:
+            engines = {t: self._engine(t) for t in updates}
+            stats = ingest_group(updates, engines)
+        except (ValueError, KeyError) as e:
+            return self._respond("ingest_many", None, t0, error=str(e))
+        return self._respond("ingest_many", None, t0, value=stats)
+
     # -- queries ------------------------------------------------------------
     def density(self, tenant: str) -> ServiceResponse:
         t0 = time.perf_counter()
@@ -142,21 +174,98 @@ class StreamService:
         )
 
     def top_k_densest(self, k: int = 5) -> ServiceResponse:
-        """Cross-tenant sweep, densest first. Queries every tenant (warm
-        path), so steady-state cost is one peel per tenant, zero compiles."""
+        """Cross-tenant sweep, densest first. Fused tenants in the same
+        capacity bucket answer through one batched peel per flush
+        (query_group); unfused tenants peel individually — either way the
+        steady state compiles nothing. ``k`` larger than the tenant count
+        returns the whole leaderboard."""
         t0 = time.perf_counter()
         board = []
         try:
-            for name in list(self.registry.names()):
-                eng = self.registry.get(name)
-                q = eng.query()
+            engines = {name: self.registry.get(name)
+                       for name in list(self.registry.names())}
+            results = query_group(engines)
+            for name, q in results.items():
                 board.append({"tenant": name, "density": q.density,
                               "warm_density": q.warm_density,
-                              "n_edges": eng.n_edges})
+                              "n_edges": engines[name].n_edges})
         except (ValueError, KeyError) as e:
             return self._respond("top_k_densest", None, t0, error=str(e))
         board.sort(key=lambda r: -r["density"])
         return self._respond("top_k_densest", None, t0, value=board[: int(k)])
+
+    # -- query coalescing ---------------------------------------------------
+    def submit_density(self, tenant: str) -> int:
+        """Enqueue a density query; returns a ticket for ``poll``. The
+        pending set flushes when the coalescing window has expired (checked
+        here), on ``flush()``, or at ``shutdown()`` — so a burst of
+        same-bucket submissions becomes one fused peel."""
+        if self._closed:
+            raise RuntimeError("service is shut down")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        now = time.perf_counter()
+        self._pending.append((ticket, tenant, now))
+        window_s = self.coalesce_window_ms * 1e-3
+        if window_s <= 0 or now - self._pending[0][2] >= window_s:
+            self.flush()
+        return ticket
+
+    def poll(self, ticket: int) -> ServiceResponse | None:
+        """Retrieve (and clear) a finished coalesced response, or None if
+        the ticket is still pending."""
+        return self._results.pop(ticket, None)
+
+    def flush(self) -> int:
+        """Answer every pending coalesced query now; returns how many were
+        flushed. Same-bucket fused tenants share one batched peel."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+        t0 = time.perf_counter()
+        engines, errors = {}, {}
+        for _, tenant, _ in pending:
+            if tenant in engines or tenant in errors:
+                continue
+            try:
+                engines[tenant] = self.registry.get(tenant)
+            except KeyError as e:
+                errors[tenant] = str(e)
+        try:
+            results = query_group(engines)
+        except Exception:
+            # one tenant's failure must not orphan the whole flush's
+            # tickets: fall back to per-tenant queries so every ticket
+            # gets a response (the failing tenant gets its own error)
+            results = {}
+            for tenant, eng in engines.items():
+                try:
+                    results[tenant] = eng.query()
+                except Exception as e:
+                    errors[tenant] = str(e)
+        for ticket, tenant, _ in pending:
+            if tenant in errors:
+                self._results[ticket] = self._respond(
+                    "density", tenant, t0, error=errors[tenant])
+                continue
+            q = results[tenant]
+            self._results[ticket] = self._respond(
+                "density", tenant, t0,
+                value={"density": q.density, "warm_density": q.warm_density,
+                       "passes": q.passes, "refreshed": q.refreshed,
+                       "pruned": q.pruned},
+            )
+        return len(pending)
+
+    def shutdown(self) -> int:
+        """Flush any pending coalesced queries and refuse new submissions.
+        Idempotent; returns how many pending queries the final flush
+        answered (their results stay pollable)."""
+        if self._closed:
+            return 0
+        flushed = self.flush()
+        self._closed = True
+        return flushed
 
     # -- observability ------------------------------------------------------
     def stats(self, tenant: str | None = None) -> ServiceResponse:

@@ -138,7 +138,6 @@ def test_loop_resumes_from_checkpoint(tmp_path):
 
 
 def test_peel_with_restarts(tmp_path):
-    import jax as _jax
     from repro.launch.train import peel_with_restarts
     from repro.graphs.generators import planted_dense
     from repro.core import pbahmani_np

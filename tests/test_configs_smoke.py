@@ -7,12 +7,12 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.data import GraphBatcher, gnn_batch, lm_token_batches, recsys_batches
+from repro.data import gnn_batch, lm_token_batches, recsys_batches
 from repro.graphs.generators import erdos_renyi
 from repro.models import gnn as gnn_mod
 from repro.models import recsys as rec_mod
 from repro.models.transformer import (
-    TransformerConfig, decode_step, forward, init_cache, init_params, loss_fn,
+    decode_step, forward, init_cache, init_params, loss_fn,
 )
 from repro.optim import adamw
 

@@ -19,7 +19,7 @@ from repro.core import (
     cbds_np, cbds_p, charikar, exact_densest, kcore_decompose, kcore_np,
     pbahmani, pbahmani_np,
 )
-from repro.graphs.generators import erdos_renyi, planted_dense
+from repro.graphs.generators import erdos_renyi
 from repro.graphs.graph import Graph
 
 

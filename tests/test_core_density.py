@@ -8,7 +8,6 @@ from _hyp import given, settings, st
 
 from repro.core import exact_densest, check_approx_bound, subgraph_density
 from repro.core.density import induced_edge_count, masked_degrees
-from repro.graphs.generators import erdos_renyi, small_named
 from repro.graphs.graph import Graph
 
 

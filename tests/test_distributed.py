@@ -1,6 +1,5 @@
 """Multi-device tests run in subprocesses with 8 fabricated CPU devices
 (the main pytest process must keep the single real device — see conftest)."""
-import json
 import os
 import subprocess
 import sys

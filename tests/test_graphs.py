@@ -1,5 +1,4 @@
 """Graph container, generators, IO, partitioner, sampler."""
-import os
 
 import numpy as np
 import pytest
@@ -7,7 +6,7 @@ from _hyp import given, settings, st
 
 from repro.core import kcore_np
 from repro.graphs.generators import (
-    barabasi_albert, erdos_renyi, planted_dense, rmat, small_named,
+    barabasi_albert, erdos_renyi, planted_dense, rmat,
 )
 from repro.graphs.graph import Graph
 from repro.graphs.io import load_snap_edgelist, save_edgelist

@@ -10,7 +10,7 @@ from repro.graphs.generators import erdos_renyi
 from repro.models.gnn import (
     EGNNConfig, GCNConfig, MACEConfig, SchNetConfig,
     egnn_forward, egnn_init, egnn_loss,
-    gcn_forward, gcn_init, gcn_loss,
+    gcn_init, gcn_loss,
     mace_forward, mace_init, mace_loss,
     schnet_forward, schnet_init, schnet_loss,
 )
