@@ -6,19 +6,20 @@ export PYTHONPATH := src
 COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
 	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py \
-	tests/test_tenants.py
+	tests/test_tenants.py tests/test_refine.py
 
 .PHONY: test coverage lint bench-smoke bench-prune-smoke bench-shard-smoke \
-	bench-tenants-smoke bench-check bench-baseline bench deps-dev
+	bench-tenants-smoke bench-refine-smoke bench-density-smoke \
+	bench-epsilon-smoke bench-check bench-baseline bench deps-dev
 
 test:
 	$(PY) -m pytest -x -q
 
-# line-coverage floor on the algorithm core + streaming subsystem
-# (needs pytest-cov: `make deps-dev`)
+# line-coverage floor on the algorithm core + streaming + refinement
+# subsystems (needs pytest-cov: `make deps-dev`)
 coverage:
 	$(PY) -m pytest -q $(COV_TESTS) \
-		--cov=repro.core --cov=repro.stream \
+		--cov=repro.core --cov=repro.stream --cov=repro.refine \
 		--cov-report=term-missing --cov-fail-under=75
 
 # ruff gate (needs ruff: `make deps-dev`); config in pyproject.toml
@@ -44,15 +45,28 @@ bench-shard-smoke:
 bench-tenants-smoke:
 	$(PY) benchmarks/bench_tenants.py --smoke
 
+# near-optimal refinement: certified duality-gap closure (monotone,
+# <= 1%), oracle sandwich vs exact, fused-rounds parity, zero recompiles
+bench-refine-smoke:
+	$(PY) benchmarks/bench_refine.py --smoke
+
+# quality-ratio trajectory cells (paper Tables 3 and 2 at CI scale)
+bench-density-smoke:
+	$(PY) benchmarks/bench_density.py --smoke
+
+bench-epsilon-smoke:
+	$(PY) benchmarks/bench_epsilon.py --smoke
+
 # benchmark-trajectory gate: compare the BENCH_*.json files the smokes
 # wrote against the committed baseline (>25% regression fails)
 bench-check:
 	$(PY) benchmarks/check_regression.py
 
 # refresh benchmarks/baseline.json from the current BENCH_*.json files
-# (run the four smokes first)
+# (run the seven smokes first)
 bench-baseline: bench-smoke bench-prune-smoke bench-shard-smoke \
-		bench-tenants-smoke
+		bench-tenants-smoke bench-refine-smoke bench-density-smoke \
+		bench-epsilon-smoke
 	$(PY) benchmarks/check_regression.py --update
 
 bench:

@@ -9,6 +9,8 @@
   bench_prune    — candidate pruning: pruned vs unpruned query latency
   bench_shard    — sharded streaming: shard_map engine vs single-device
   bench_tenants  — fused multi-tenant: batched peels vs sequential dispatch
+  bench_refine   — near-optimal refinement: duality-gap closure + fused
+                   batched rounds vs sequential per-tenant refinement
 """
 from __future__ import annotations
 
@@ -17,11 +19,12 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_density, bench_epsilon, bench_kernels,
-                            bench_prune, bench_roofline, bench_scaling,
-                            bench_shard, bench_stream, bench_tenants)
+                            bench_prune, bench_refine, bench_roofline,
+                            bench_scaling, bench_shard, bench_stream,
+                            bench_tenants)
     for name, fn in [
         ("bench_density (paper Table 3)", bench_density.main),
-        ("bench_epsilon (paper Table 2)", bench_epsilon.run),
+        ("bench_epsilon (paper Table 2)", bench_epsilon.main),
         ("bench_scaling (paper Figs 7-19)", bench_scaling.main),
         ("bench_kernels", bench_kernels.run),
         ("bench_roofline (single-pod)", bench_roofline.run),
@@ -29,6 +32,7 @@ def main() -> None:
         ("bench_prune (candidate pruning)", bench_prune.main),
         ("bench_shard (sharded streaming)", bench_shard.main),
         ("bench_tenants (fused multi-tenant)", bench_tenants.main),
+        ("bench_refine (near-optimal refinement)", bench_refine.main),
     ]:
         print(f"\n=== {name} ===")
         t0 = time.time()

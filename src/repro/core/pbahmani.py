@@ -134,7 +134,8 @@ def _pbahmani_jit(
 
 
 def pbahmani(
-    graph: Graph, eps: float = 0.0, pruned: bool = False
+    graph: Graph, eps: float = 0.0, pruned: bool = False,
+    refine_rounds: int = 0,
 ) -> tuple[float, np.ndarray, int]:
     """Run P-Bahmani. Returns (best_density, best_mask, passes).
 
@@ -145,21 +146,39 @@ def pbahmani(
     once the live set fits, returning the bit-identical triple at a fraction
     of the lane work (the exactness invariant proven in prune.py and
     asserted in tests/test_prune.py).
+
+    ``refine_rounds > 0`` feeds the peel result through that many
+    weighted-peel refinement rounds (repro.refine): the returned density is
+    never below the peel's (exact-rational guard) and typically near-exact
+    — use :func:`repro.refine.refine` directly for the duality-gap
+    certificate and the anytime ``target_gap`` loop. ``passes`` then counts
+    the seed peel's passes plus every refinement round's.
     """
     if graph.n_nodes == 0:
         return 0.0, np.zeros(0, dtype=bool), 0
     if pruned:
         from repro.core.prune import pbahmani_pruned
 
-        return pbahmani_pruned(graph, eps=eps)
-    src = jnp.asarray(graph.src)
-    dst = jnp.asarray(graph.dst)
-    final = _pbahmani_jit(src, dst, graph.n_nodes, jnp.asarray(graph.n_edges, jnp.int32), float(eps))
-    return (
-        float(final.best_density),
-        np.asarray(final.best_mask),
-        int(final.passes),
-    )
+        out = pbahmani_pruned(graph, eps=eps)
+    else:
+        src = jnp.asarray(graph.src)
+        dst = jnp.asarray(graph.dst)
+        final = _pbahmani_jit(
+            src, dst, graph.n_nodes, jnp.asarray(graph.n_edges, jnp.int32),
+            float(eps))
+        out = (
+            float(final.best_density),
+            np.asarray(final.best_mask),
+            int(final.passes),
+        )
+    if refine_rounds > 0:
+        from repro.refine.engine import refine
+
+        # negative target: run exactly refine_rounds rounds (deterministic)
+        res = refine(graph, target_gap=-1.0, max_rounds=int(refine_rounds),
+                     eps=eps, seed=out)
+        return res.density, res.mask, res.passes
+    return out
 
 
 # ---------------------------------------------------------------------------

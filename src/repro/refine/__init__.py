@@ -1,0 +1,27 @@
+# Near-optimal refinement subsystem (ISSUE 5): iterated weighted peeling
+# (Greedy++ / Frank-Wolfe on the load-balancing LP) with exact-rational
+# duality-gap certificates — the tier between the (2+2eps)-approximate
+# peels and the brute-force exact flow solver.
+#
+#   loads.py   — edge-load state + jitted weighted-peel rounds (COO, dense,
+#                and vmapped multi-tenant variants)
+#   certify.py — LP-duality gap certificates (exact ints) + numpy bit-oracle
+#   engine.py  — refine(graph, target_gap=...) anytime API with history
+from repro.refine.certify import (
+    GapCertificate, make_certificate, oracle_check, refine_round_np,
+)
+from repro.refine.engine import (
+    DEFAULT_TARGET_GAP, RefineResult, RoundRecord, refine, refine_resident,
+)
+
+__all__ = [
+    "GapCertificate",
+    "make_certificate",
+    "oracle_check",
+    "refine_round_np",
+    "DEFAULT_TARGET_GAP",
+    "RefineResult",
+    "RoundRecord",
+    "refine",
+    "refine_resident",
+]

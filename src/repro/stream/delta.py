@@ -85,6 +85,9 @@ from repro.core.prune import (
     PrunePlan, _batched_bucket_peel_jit, _bucket_peel_jit, _plan_jit,
     build_plan, make_sharded_plan, pruned_peel_host,
 )
+from repro.refine.certify import GapCertificate, make_certificate
+from repro.refine.engine import DEFAULT_TARGET_GAP, refine_resident
+from repro.refine.loads import REFINE_JITS
 from repro.stream.buffer import EdgeBuffer, MIN_CAPACITY, next_pow2
 from repro.utils.compat import make_mesh_auto, shard_map_compat
 
@@ -333,6 +336,8 @@ class UpdateStats:
 @dataclass
 class QueryResult:
     density: float            # oracle-exact: == cold pbahmani on this graph
+                              # (refined queries: best certified density,
+                              # >= the peel's, never above rho*)
     mask: np.ndarray          # bool [n_nodes] achieving ``density``
     passes: int
     warm_density: float       # max(density, prev-mask re-evaluation)
@@ -340,6 +345,10 @@ class QueryResult:
     refreshed: bool           # this query ran the epoch-refresh path
     latency_ms: float = 0.0
     pruned: bool = False      # peeled the compacted candidate subproblem
+    # refinement (repro.refine, query(refine=True) only)
+    certificate: GapCertificate | None = None
+    refine_rounds: int = 0
+    certified_skip: bool = False  # cached bound proved equality: no peel ran
 
 
 @dataclass
@@ -361,6 +370,11 @@ class EngineMetrics:
     # contracting-graph bookkeeping (ISSUE 3 bugfixes)
     n_buffer_shrinks: int = 0     # epoch refreshes that halved slot capacity
     n_bucket_shrinks: int = 0     # mid-epoch prune-bucket shrinks
+    # near-optimal refinement (repro.refine)
+    n_refine_queries: int = 0     # queries that ran refinement rounds
+    refine_rounds_total: int = 0
+    n_certified_skips: int = 0    # refined queries answered from the cached
+                                  # certificate alone (no peel dispatched)
 
 
 class DeltaEngine:
@@ -409,6 +423,14 @@ class DeltaEngine:
         self._plan: PrunePlan | None = None
         self._last_handoff: tuple[int, int] | None = None
         self._cached_query: QueryResult | None = None
+        # refinement state (repro.refine): the certificate + its mask
+        # persist across updates — deletions keep the dual bound valid and
+        # insertions shift it by the max incident count, which is what lets
+        # a later refined query skip the peel when the bound proves equality
+        self._cached_refined: QueryResult | None = None
+        self._refine_cert: GapCertificate | None = None
+        self._cert_mask: np.ndarray | None = None
+        self._cert_insert_slack: int = 0
 
     # -- device-state management -------------------------------------------
     @property
@@ -480,6 +502,14 @@ class DeltaEngine:
         del_frac = (int(dele.shape[0]) / n_eff) if n_eff else 0.0
         self._staleness += 1.0 + DELETE_STALENESS_WEIGHT * del_frac
         self._cached_query = None  # graph changed: next query recomputes
+        self._cached_refined = None
+        if self._refine_cert is not None and ins.shape[0]:
+            # each inserted edge adds one unit of load to (at most) both
+            # endpoints of the averaged orientation, so the dual bound
+            # shifts by at most the max incident insert count — deletions
+            # only free load and leave it valid as-is (certify.py)
+            counts = np.bincount(ins.astype(np.int64).ravel())
+            self._cert_insert_slack += int(counts.max())
         ms = (time.perf_counter() - t0) * 1e3
         self.metrics.n_update_batches += 1
         self.metrics.update_ms_total += ms
@@ -646,10 +676,26 @@ class DeltaEngine:
         )
         return self._cached_query
 
-    def query(self) -> QueryResult:
+    def query(self, refine: bool = False, target_gap: float | None = None,
+              max_refine_rounds: int = 64) -> QueryResult:
         """Densest-subgraph query on the current graph. Warm path unless the
         staleness counter says the epoch is due; repeat queries on an
-        unchanged graph return the memoized result."""
+        unchanged graph return the memoized result.
+
+        ``refine=True`` serves a *certified* density instead: the exact
+        warm/pruned peel seeds weighted-peel refinement rounds
+        (repro.refine) off the same resident device state, until the
+        LP-duality gap closes below ``target_gap`` (relative to the dual
+        bound; default ``repro.refine.DEFAULT_TARGET_GAP``) or
+        ``max_refine_rounds`` is spent. The reported density is >= the
+        peel's, never above rho*, and carries a :class:`GapCertificate`.
+        When the previous certificate still *proves* equality on the
+        current graph — deletions keep the dual bound valid; insertions
+        shift it by their max incident count — the peel is skipped
+        entirely and the query costs one host re-count (the ROADMAP
+        early-exit-certificates item; ``certified_skip`` marks it)."""
+        if refine:
+            return self._query_refined(target_gap, max_refine_rounds)
         if self._cached_query is not None:
             return self._cached_query
         if self._generation < 0:
@@ -704,6 +750,97 @@ class DeltaEngine:
         )
         return self._cached_query
 
+    # -- near-optimal refinement (repro.refine) ------------------------------
+    def _mask_counts(self, mask: np.ndarray) -> tuple[int, int]:
+        """Exact integer (ne, nv) of ``mask`` (full vertex width) on the
+        current graph, from the host slot arrays — O(|E|) numpy, no device
+        dispatch (what makes the certified skip a peel-free query)."""
+        u, v = self.buffer.host_view()
+        lv = np.zeros(self.node_capacity + 1, dtype=bool)
+        lv[: self.node_capacity] = mask
+        return int((lv[u] & lv[v]).sum()), int(mask.sum())
+
+    def _certified_skip(self) -> QueryResult | None:
+        """Answer a refined query from the cached certificate alone when it
+        still proves equality: the stored mask's density re-counted on the
+        *current* edges must reach the stored dual bound shifted by the
+        insert slack (exact integer comparison — a proof, so the returned
+        density IS rho* of the current graph). Returns None otherwise."""
+        cert = self._refine_cert
+        if cert is None or self._cert_mask is None:
+            return None
+        t0 = time.perf_counter()
+        ne, nv = self._mask_counts(self._cert_mask)
+        if nv == 0:
+            return None
+        dual_num = cert.dual_num + self._cert_insert_slack * cert.dual_den
+        if ne * cert.dual_den < dual_num * nv:
+            return None
+        new_cert = make_certificate(ne, nv, dual_num, cert.dual_den)
+        self._refine_cert = new_cert  # re-anchored to the current graph
+        self._cert_insert_slack = 0
+        mask = self._cert_mask[: self.n_nodes].copy()
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.n_queries += 1
+        self.metrics.n_certified_skips += 1
+        self.metrics.query_ms_total += ms
+        res = QueryResult(
+            density=new_cert.density, mask=mask, passes=0,
+            warm_density=new_cert.density, warm_mask=mask.copy(),
+            refreshed=False, latency_ms=ms, certificate=new_cert,
+            refine_rounds=0, certified_skip=True,
+        )
+        self._cached_refined = res
+        return res
+
+    def _refine_arrays(self):
+        """(src, dst, deg) device arrays the refinement rounds consume.
+        Sharded engines re-upload single-device (the cbds precedent: a
+        non-shard_map jit over sharded operands would silently all-gather;
+        a sharded refine round is a ROADMAP follow-up)."""
+        if self.mesh is not None:
+            src, dst, deg = self.buffer.resident_state(self.node_capacity)
+            return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(deg)
+        return self._src, self._dst, self._deg
+
+    def _query_refined(self, target_gap: float | None,
+                       max_rounds: int) -> QueryResult:
+        tg = DEFAULT_TARGET_GAP if target_gap is None else float(target_gap)
+        cached = self._cached_refined
+        if (cached is not None and cached.certificate is not None
+                and cached.certificate.rel_gap <= tg):
+            return cached
+        if self._generation < 0:
+            self._resync_device()
+        skip = self._certified_skip()
+        if skip is not None:
+            return skip
+        q = self.query()  # exact eps-peel seed (pruned/warm path)
+        t0 = time.perf_counter()
+        seed_mask = np.zeros(self.node_capacity, dtype=bool)
+        seed_mask[: self.n_nodes] = q.mask
+        seed_ne, seed_nv = self._mask_counts(seed_mask)
+        src, dst, deg = self._refine_arrays()
+        cert, mask_full, passes, rounds, _ = refine_resident(
+            src, dst, deg, self.buffer.n_edges, self.node_capacity,
+            self.eps, seed_ne, seed_nv, seed_mask, q.passes, tg, max_rounds)
+        self._refine_cert = cert
+        self._cert_mask = mask_full.copy()
+        self._cert_insert_slack = 0
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.n_refine_queries += 1
+        self.metrics.refine_rounds_total += rounds
+        self.metrics.query_ms_total += ms
+        mask = mask_full[: self.n_nodes].copy()
+        res = QueryResult(
+            density=cert.density, mask=mask, passes=passes,
+            warm_density=cert.density, warm_mask=mask.copy(),
+            refreshed=q.refreshed, latency_ms=q.latency_ms + ms,
+            pruned=q.pruned, certificate=cert, refine_rounds=rounds,
+        )
+        self._cached_refined = res
+        return res
+
     def density(self) -> float:
         return self.query().density
 
@@ -752,6 +889,8 @@ class DeltaEngine:
                    _batched_warm_peel_jit, _batched_bucket_peel_jit):
             total += fn._cache_size()
         for fn in SHARDED_JITS:
+            total += fn._cache_size()
+        for fn in REFINE_JITS:
             total += fn._cache_size()
         # fused lane-management entry points (stream/fused.py) — imported
         # lazily to avoid a module cycle; if the fused layer was never

@@ -62,10 +62,17 @@ from repro.core.pbahmani import PeelState
 from repro.core.prune import (
     _batched_bucket_peel_jit, merge_pruned_peel, prepare_pruned_peel,
 )
+from repro.refine.certify import (
+    better_fraction, dual_fraction, make_certificate, max_fraction,
+)
+from repro.refine.engine import DEFAULT_TARGET_GAP
+from repro.refine.loads import (
+    _batched_dense_refine_round_jit, _batched_refine_round_jit,
+)
 from repro.stream.buffer import MIN_CAPACITY, next_pow2
 from repro.stream.delta import (
-    DeltaEngine, QueryResult, _batched_apply_jit, _batched_warm_peel_jit,
-    MIN_BATCH,
+    DeltaEngine, QueryResult, _apply_batch_body, _batched_apply_jit,
+    _batched_warm_peel_jit, MIN_BATCH,
 )
 
 MIN_LANES = 4  # smallest lane stack; doubles when a bucket fills
@@ -120,17 +127,23 @@ def _rows_gather_jit(stack, lanes):
     return stack[lanes]
 
 
-@jax.jit
-def _adj_ingest_jit(adj, du, dv, w):
-    """Mirror one fused update batch into the dense adjacency stack: two
-    vmapped pair-scatters of the signed weights (+1/-1 insert/delete, 0
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _batched_apply_dense_jit(src, dst, deg, adj, slots, su, sv, du, dv, w,
+                             n_nodes: int):
+    """Dense-bucket ingest as ONE program (ISSUE 5 satellite; previously
+    the COO scatter and the adjacency scatter dispatched separately): the
+    vmapped slot/histogram update of ``_batched_apply_jit`` fused with the
+    adjacency pair-scatter of the signed weights (+1/-1 insert/delete, 0
     padding; sentinel endpoints index out of bounds and drop). Exact
     float32 integers, so the dense state tracks the COO state bit for
     bit."""
-    def body(a, u, v, wf):
-        return a.at[u, v].add(wf, mode="drop").at[v, u].add(wf, mode="drop")
+    def body(a, b, c, A, d, e, f, g, h, i):
+        a, b, c = _apply_batch_body(a, b, c, d, e, f, g, h, i, n_nodes)
+        wf = i.astype(jnp.float32)
+        A = A.at[g, h].add(wf, mode="drop").at[h, g].add(wf, mode="drop")
+        return a, b, c, A
 
-    return jax.vmap(body)(adj, du, dv, w.astype(jnp.float32))
+    return jax.vmap(body)(src, dst, deg, adj, slots, su, sv, du, dv, w)
 
 
 def _dense_pass(state: PeelState, adj: jax.Array, eps: float) -> PeelState:
@@ -204,8 +217,8 @@ def _batched_dense_warm_peel_jit(adj, deg, n_edges, prev_mask, eps: float):
 
 
 FUSED_JITS = [_lane_write_jit, _mask_rows_write_jit, _lane_gather_jit,
-              _adj_lane_write_jit, _rows_gather_jit, _adj_ingest_jit,
-              _batched_dense_warm_peel_jit]
+              _adj_lane_write_jit, _rows_gather_jit,
+              _batched_apply_dense_jit, _batched_dense_warm_peel_jit]
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +239,11 @@ class TenantBatch:
         self.lane_of: dict[str, int] = {}
         self._free = list(range(self.lanes - 1, -1, -1))
         self.lane_generation: dict[int, int] = {}
-        self.n_ingests = 0      # fused scatter programs dispatched
+        self.n_ingests = 0      # ingest batches absorbed
+        self.n_ingest_dispatches = 0  # programs launched for them — equal
+                                      # to n_ingests since the dense-bucket
+                                      # COO+adjacency fusion (one program
+                                      # per ingest, dense or sparse)
         self.n_group_peels = 0  # fused query flushes
         self._alloc(self.lanes)
 
@@ -333,15 +350,19 @@ class TenantBatch:
             du[lane, :k] = r_du
             dv[lane, :k] = r_dv
             w[lane, :k] = r_w
-        self._src, self._dst, self._deg = _batched_apply_jit(
-            self._src, self._dst, self._deg,
-            jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
-            jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w),
-            self.node_capacity)
+        args = (jnp.asarray(slots), jnp.asarray(su), jnp.asarray(sv),
+                jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w))
         if self.dense:
-            self._adj = _adj_ingest_jit(
-                self._adj, jnp.asarray(du), jnp.asarray(dv), jnp.asarray(w))
+            # one fused program: COO scatter + histogram + adjacency scatter
+            self._src, self._dst, self._deg, self._adj = (
+                _batched_apply_dense_jit(
+                    self._src, self._dst, self._deg, self._adj, *args,
+                    self.node_capacity))
+        else:
+            self._src, self._dst, self._deg = _batched_apply_jit(
+                self._src, self._dst, self._deg, *args, self.node_capacity)
         self.n_ingests += 1
+        self.n_ingest_dispatches += 1
         return b
 
     def peel_rows(self, lanes: np.ndarray, n_edges: np.ndarray):
@@ -487,7 +508,14 @@ class FusedEngine(DeltaEngine):
         return row
 
     # -- queries ------------------------------------------------------------
-    def query(self) -> QueryResult:
+    def query(self, refine: bool = False, target_gap: float | None = None,
+              max_refine_rounds: int = 64) -> QueryResult:
+        if refine:
+            # group of one through the batched refinement flush: same
+            # executables as a full bucket sweep, compiled once per shape
+            return query_group(
+                {self.name: self}, refine=True, target_gap=target_gap,
+                max_refine_rounds=max_refine_rounds)[self.name]
         if self._cached_query is not None:
             return self._cached_query
         if self._generation < 0:
@@ -518,21 +546,37 @@ def _pruned_result(density: float, mask: np.ndarray,
                        refreshed=False, pruned=True)
 
 
-def _flush(batch: TenantBatch, members) -> dict[str, QueryResult]:
+def _flush(batch: TenantBatch, members, refine: bool = False,
+           target_gap: float | None = None,
+           max_refine_rounds: int = 64) -> dict[str, QueryResult]:
     """One fused flush for ``members`` (same bucket, warm path): at most one
     batched bucket peel per plan-bucket shape plus one batched warm peel.
     Per-tenant results are bit-identical to each engine's unbatched query
-    (same host prepare/merge, vmapped device recurrence)."""
+    (same host prepare/merge, vmapped device recurrence). With ``refine``
+    the peel results seed one batched refinement-round loop for the whole
+    group (``_refine_flush``); the exact peel results still land in each
+    engine's plain query cache."""
     t0 = time.perf_counter()
     out: dict[str, QueryResult] = {}
     warm: list = []
     dispatches: list = []
     mask_writes: list = []  # (lane, full-width mask) warm-seed updates
+    # a member with a valid memoized peel (possible only on the refined
+    # path — plain query_group short-circuits those before the flush)
+    # reuses it as the refinement seed instead of re-peeling its lane
+    cached: set[str] = set()
+    live: list = []
     for name, eng in members:
+        if eng._cached_query is not None:
+            cached.add(name)
+            out[name] = eng._cached_query
+        else:
+            live.append((name, eng))
+    for name, eng in live:
         if eng.pruned and eng._plan is None:
             eng._rebuild_plan()
     # pull only the queried pruned lanes' degree rows, not the whole stack
-    pruned_lanes = [eng._lane for _, eng in members
+    pruned_lanes = [eng._lane for _, eng in live
                     if eng.pruned and eng._plan.enabled]
     deg_rows: dict[int, np.ndarray] = {}
     if pruned_lanes:
@@ -541,7 +585,7 @@ def _flush(batch: TenantBatch, members) -> dict[str, QueryResult]:
         li[: len(pruned_lanes)] = pruned_lanes
         rows = np.asarray(_rows_gather_jit(batch._deg, jnp.asarray(li)))
         deg_rows = {lane: rows[i] for i, lane in enumerate(pruned_lanes)}
-    for name, eng in members:
+    for name, eng in live:
         if eng.pruned:
             if eng._plan.enabled:
                 u, v = eng.buffer.host_view()
@@ -621,28 +665,174 @@ def _flush(batch: TenantBatch, members) -> dict[str, QueryResult]:
         batch.set_mask_rows([lane for lane, _ in mask_writes],
                             np.stack([m for _, m in mask_writes]))
     batch.n_group_peels += 1
+    refined = None
+    if refine:
+        refined = _refine_flush(batch, members, out, target_gap,
+                                max_refine_rounds)
     share = (time.perf_counter() - t0) * 1e3 / max(len(members), 1)
     for name, eng in members:
-        q = out[name]
-        q.latency_ms = share
-        eng.metrics.n_queries += 1
-        eng.metrics.query_ms_total += share
-        eng._cached_query = q
+        if name not in cached:  # a cache hit is not a new peel query
+            q = out[name]
+            q.latency_ms = share
+            eng.metrics.n_queries += 1
+            eng.metrics.query_ms_total += share
+            eng._cached_query = q
+        if refined is not None:
+            refined[name].latency_ms = share
+            eng._cached_refined = refined[name]
+    return refined if refined is not None else out
+
+
+def _refine_flush(batch: TenantBatch, members, peel_out,
+                  target_gap: float | None,
+                  max_rounds: int) -> dict[str, QueryResult]:
+    """Batched refinement rounds for one bucket's queried lanes: loads live
+    in leading-axis ``[G, V]`` arrays and every round is ONE vmapped
+    program (dense GEMV rounds under DENSE_NODE_CAP, COO otherwise), with
+    converged lanes frozen through ``select`` exactly like the batched
+    peels. The loop runs until every member's certificate meets
+    ``target_gap`` — lanes that met it early ride along and their
+    certificates only tighten (running-min dual, monotone best), so a
+    fused group's density is never worse than a solo refinement's; with a
+    negative target (fixed-round mode) the group is bit-identical to
+    per-tenant ``_refine_round_jit`` loops, the parity tests/test_refine.py
+    asserts."""
+    tg = DEFAULT_TARGET_GAP if target_gap is None else float(target_gap)
+    max_rounds = max(int(max_rounds), 1)  # a certificate needs >= 1 round
+    g = len(members)
+    gp = next_pow2(max(g, 1))
+    lanes = np.full(gp, members[0][1]._lane, np.int32)
+    lanes[:g] = [eng._lane for _, eng in members]
+    li = jnp.asarray(lanes)
+    src_g, dst_g, deg_g, _ = _lane_gather_jit(
+        batch._src, batch._dst, batch._deg, batch._prev_mask, li)
+    adj_g = _rows_gather_jit(batch._adj, li) if batch.dense else None
+
+    nc = batch.node_capacity
+    seeds = []
+    best_mask = np.zeros((gp, nc), dtype=bool)
+    best_ne = np.zeros(gp, np.int32)
+    best_nv = np.zeros(gp, np.int32)
+    best_density = np.zeros(gp, np.float32)
+    passes0 = np.zeros(gp, np.int32)
+    n_edges = np.zeros(gp, np.int32)
+    for i, (name, eng) in enumerate(members):
+        q = peel_out[name]
+        mask_full = np.zeros(nc, dtype=bool)
+        mask_full[: eng.n_nodes] = q.mask
+        ne, nv = eng._mask_counts(mask_full)
+        seeds.append((ne, nv, mask_full))
+        best_mask[i] = mask_full
+        best_ne[i], best_nv[i] = ne, nv
+        best_density[i] = (np.float32(ne) / np.float32(nv) if nv
+                           else np.float32(0.0))
+        passes0[i] = q.passes
+        n_edges[i] = eng.buffer.n_edges
+    for i in range(g, gp):  # pad lanes duplicate member 0 and ride along
+        best_mask[i] = best_mask[0]
+        best_ne[i], best_nv[i] = best_ne[0], best_nv[0]
+        best_density[i] = best_density[0]
+        n_edges[i] = n_edges[0]
+
+    loads = jnp.zeros((gp, nc), jnp.int32)
+    bd = jnp.asarray(best_density)
+    be = jnp.asarray(best_ne)
+    bv = jnp.asarray(best_nv)
+    bm = jnp.asarray(best_mask)
+    ps = jnp.asarray(passes0)
+    ne_j = jnp.asarray(n_edges)
+    duals: list = [None] * g
+    certs: list = [None] * g
+    rounds = 0
+    for t in range(1, int(max_rounds) + 1):
+        if batch.dense:
+            loads, bd, be, bv, bm, ps = _batched_dense_refine_round_jit(
+                adj_g, deg_g, ne_j, loads, bd, be, bv, bm, ps, batch.eps)
+        else:
+            loads, bd, be, bv, bm, ps = _batched_refine_round_jit(
+                src_g, dst_g, deg_g, ne_j, loads, bd, be, bv, bm, ps,
+                nc, batch.eps)
+        rounds = t
+        loads_np = np.asarray(loads)
+        be_np, bv_np = np.asarray(be), np.asarray(bv)
+        done = True
+        for i in range(g):
+            b_ne, b_nv = max_fraction((int(be_np[i]), int(bv_np[i])),
+                                      seeds[i][:2])
+            num, den = dual_fraction(loads_np[i], t)
+            if duals[i] is None or better_fraction(num, den, *duals[i]):
+                duals[i] = (num, den)
+            certs[i] = make_certificate(b_ne, b_nv, *duals[i])
+            done = done and certs[i].rel_gap <= tg
+        if done:
+            break
+
+    bm_np, ps_np = np.asarray(bm), np.asarray(ps)
+    out = {}
+    for i, (name, eng) in enumerate(members):
+        cert = certs[i]
+        seed_ne, seed_nv, seed_mask = seeds[i]
+        if cert.best_ne == seed_ne and cert.best_nv == seed_nv:
+            mask_full = seed_mask
+        else:
+            mask_full = bm_np[i]
+        eng._refine_cert = cert
+        eng._cert_mask = mask_full.copy()
+        eng._cert_insert_slack = 0
+        eng.metrics.n_refine_queries += 1
+        eng.metrics.refine_rounds_total += rounds
+        mask = mask_full[: eng.n_nodes].copy()
+        out[name] = QueryResult(
+            density=cert.density, mask=mask, passes=int(ps_np[i]),
+            warm_density=cert.density, warm_mask=mask.copy(),
+            refreshed=peel_out[name].refreshed,
+            pruned=peel_out[name].pruned, certificate=cert,
+            refine_rounds=rounds,
+        )
     return out
 
 
-def query_group(engines: dict[str, DeltaEngine]) -> dict[str, QueryResult]:
+def query_group(engines: dict[str, DeltaEngine], refine: bool = False,
+                target_gap: float | None = None,
+                max_refine_rounds: int = 64) -> dict[str, QueryResult]:
     """Answer a set of tenants' densest-subgraph queries with fused
     execution wherever possible: fused tenants flush per-bucket (one
     batched warm peel + one batched bucket peel per plan shape); plain and
     sharded engines fall back to their own query path. Cached results are
     reused, and stale tenants take their epoch refresh individually first
-    (the refresh is epoch-amortized by design)."""
+    (the refresh is epoch-amortized by design).
+
+    ``refine=True`` answers with *certified* densities instead: fused
+    members of a bucket share one batched refinement-round loop per flush
+    (leading-axis load arrays, ``select``-frozen convergence — see
+    ``_refine_flush``); tenants whose cached certificate still proves
+    equality on their current graph skip the flush entirely (the
+    certified-skip path of delta.py)."""
     out: dict[str, QueryResult] = {}
     flushes: dict[TenantBatch, list] = defaultdict(list)
+    tg = DEFAULT_TARGET_GAP if target_gap is None else float(target_gap)
     for name, eng in engines.items():
         if not isinstance(eng, FusedEngine):
-            out[name] = eng.query()
+            out[name] = (eng.query(refine=True, target_gap=target_gap,
+                                   max_refine_rounds=max_refine_rounds)
+                         if refine else eng.query())
+            continue
+        if refine:
+            cached = eng._cached_refined
+            if (cached is not None and cached.certificate is not None
+                    and cached.certificate.rel_gap <= tg):
+                out[name] = cached
+                continue
+            if (eng._generation < 0
+                    or eng._generation != eng.buffer.generation):
+                eng._resync_device()
+            skip = eng._certified_skip()
+            if skip is not None:
+                out[name] = skip
+                continue
+            if eng.stale:
+                eng.refresh()  # re-anchor; the refined flush runs below
+            flushes[eng.batch].append((name, eng))
             continue
         if eng._cached_query is not None:
             out[name] = eng._cached_query
@@ -654,7 +844,9 @@ def query_group(engines: dict[str, DeltaEngine]) -> dict[str, QueryResult]:
             continue
         flushes[eng.batch].append((name, eng))
     for batch, members in flushes.items():
-        out.update(_flush(batch, members))
+        out.update(_flush(batch, members, refine=refine,
+                          target_gap=target_gap,
+                          max_refine_rounds=max_refine_rounds))
     return out
 
 

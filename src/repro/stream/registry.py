@@ -67,6 +67,12 @@ class TenantStats:
     fused: bool = False
     lane: int = -1
     batch_lanes: int = 0
+    # near-optimal refinement (repro.refine): certified queries served,
+    # total rounds spent, and how many were answered by the cached
+    # certificate alone (no peel dispatched — the early-exit path)
+    n_refine_queries: int = 0
+    refine_rounds_total: int = 0
+    n_certified_skips: int = 0
 
 
 class GraphRegistry:
@@ -227,6 +233,9 @@ class GraphRegistry:
                   and eng._lane is not None else -1),
             batch_lanes=(eng.batch.lanes if isinstance(eng, FusedEngine)
                          and eng.batch is not None else 0),
+            n_refine_queries=m.n_refine_queries,
+            refine_rounds_total=m.refine_rounds_total,
+            n_certified_skips=m.n_certified_skips,
         )
 
     def all_stats(self) -> list[TenantStats]:

@@ -146,18 +146,39 @@ class StreamService:
         return self._respond("ingest_many", None, t0, value=stats)
 
     # -- queries ------------------------------------------------------------
-    def density(self, tenant: str) -> ServiceResponse:
+    @staticmethod
+    def _density_value(q) -> dict:
+        value = {"density": q.density, "warm_density": q.warm_density,
+                 "passes": q.passes, "refreshed": q.refreshed,
+                 "pruned": q.pruned}
+        if q.certificate is not None:
+            c = q.certificate
+            value.update({
+                "certified_gap": c.rel_gap,     # (dual - density) / dual
+                "dual_bound": c.dual_bound,     # LP bound: >= rho*(G)
+                "proved_optimal": c.proves_optimal,
+                "refine_rounds": q.refine_rounds,
+                "certified_skip": q.certified_skip,
+            })
+        return value
+
+    def density(self, tenant: str, refine: bool = False,
+                target_gap: float | None = None,
+                max_refine_rounds: int = 64) -> ServiceResponse:
+        """Densest-subgraph density for one tenant. ``refine=True`` serves
+        the certified near-optimal density instead (repro.refine): the
+        response gains ``certified_gap`` / ``dual_bound`` /
+        ``proved_optimal`` — an operator alarms on the gap exactly like on
+        the compile counter."""
         t0 = time.perf_counter()
         try:
-            q = self._engine(tenant).query()
+            q = self._engine(tenant).query(
+                refine=refine, target_gap=target_gap,
+                max_refine_rounds=max_refine_rounds)
         except (ValueError, KeyError) as e:
             return self._respond("density", tenant, t0, error=str(e))
-        return self._respond(
-            "density", tenant, t0,
-            value={"density": q.density, "warm_density": q.warm_density,
-                   "passes": q.passes, "refreshed": q.refreshed,
-                   "pruned": q.pruned},
-        )
+        return self._respond("density", tenant, t0,
+                             value=self._density_value(q))
 
     def membership(self, tenant: str, warm: bool = False) -> ServiceResponse:
         t0 = time.perf_counter()
@@ -250,11 +271,7 @@ class StreamService:
                 continue
             q = results[tenant]
             self._results[ticket] = self._respond(
-                "density", tenant, t0,
-                value={"density": q.density, "warm_density": q.warm_density,
-                       "passes": q.passes, "refreshed": q.refreshed,
-                       "pruned": q.pruned},
-            )
+                "density", tenant, t0, value=self._density_value(q))
         return len(pending)
 
     def shutdown(self) -> int:

@@ -11,7 +11,11 @@ algorithm in the tree must satisfy simultaneously — not point tests:
   (c) the densest core is a 2-approximation (Tatti 2019): max-core density
       >= rho*/2;
   (d) ``exact_densest`` agrees with brute-force subset enumeration on
-      graphs small enough to enumerate (<= 8 vertices).
+      graphs small enough to enumerate (<= 8 vertices);
+  (e) refinement (repro.refine) is sandwiched: seed peel <= refined
+      density <= rho* <= dual bound, with the refined mask achieving the
+      reported density — every algorithm in the tree plus its certificate
+      agree on the same graph.
 
 Randomization goes through tests/_hyp.py, so the suite degrades to
 deterministic seeded examples on a bare interpreter.
@@ -27,6 +31,7 @@ from repro.core import (
 )
 from repro.graphs.generators import erdos_renyi, planted_dense
 from repro.graphs.graph import Graph
+from repro.refine import refine
 
 
 def _random_graph(seed: int, n: int = 60, p: float = 0.1) -> Graph:
@@ -116,6 +121,29 @@ def _brute_force_densest(g: Graph) -> float:
         ne = int((mask[s] & mask[d]).sum())
         best = max(best, ne / nv)
     return best
+
+
+# ---------------------------------------------------------------------------
+# (e) refinement sandwich across the whole algorithm family
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.1]))
+def test_refinement_sandwiched_between_peel_and_dual(seed, eps):
+    g = _random_graph(seed)
+    if g.n_edges == 0:
+        return
+    rho_star, _ = exact_densest(g)
+    rho_pb, _, _ = pbahmani(g, eps=eps)
+    res = refine(g, target_gap=0.05, max_rounds=250, eps=eps)
+    # reported density == density recomputed from the returned mask (a)
+    assert g.subgraph_density(res.mask) == pytest.approx(res.density,
+                                                         rel=1e-9)
+    # seed peel <= refined <= rho* <= dual, every inequality at once
+    assert res.density >= rho_pb - 1e-6
+    assert res.density <= rho_star + 1e-9
+    assert res.dual_bound >= rho_star - 1e-9
+    # and the certificate's own claim holds against the flow oracle
+    assert res.density >= (1 - res.rel_gap) * res.dual_bound - 1e-9
 
 
 @settings(max_examples=10, deadline=None)

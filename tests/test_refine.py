@@ -1,0 +1,327 @@
+"""Refinement-subsystem invariants (ISSUE 5).
+
+The properties every refined result must satisfy simultaneously:
+
+  (a) anytime soundness — the certificate sandwich density <= rho*(G) <=
+      dual_bound against the exact flow solver, on every graph small
+      enough to afford it;
+  (b) monotonicity — per-round certified density nondecreasing, per-round
+      relative gap nonincreasing (running-min dual), and the final density
+      never below the seed peel's (exact-rational guard);
+  (c) near-exactness — refined density within ``target_gap`` of rho* on
+      every <= 8-vertex graph (where brute force is the oracle);
+  (d) bit-identity — the numpy round oracle replicates the device round
+      (loads AND best state), and the fused batched rounds (dense GEMV and
+      COO) replicate per-tenant solo refinement in fixed-round mode;
+  (e) serving — DeltaEngine/FusedEngine/StreamService surface certified
+      densities from warm state, the certified skip answers deletion-only
+      follow-ups without peeling, and nothing on the hot path recompiles.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core.exact import exact_densest
+from repro.core.pbahmani import pbahmani
+from repro.graphs.generators import erdos_renyi, planted_dense
+from repro.graphs.graph import Graph
+from repro.refine import (
+    make_certificate, oracle_check, refine, refine_round_np,
+)
+from repro.refine.certify import dual_fraction
+from repro.refine.loads import _refine_round_jit
+from repro.stream import DeltaEngine, FusedEngine, FusedPool, StreamService
+from repro.stream.fused import query_group
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# (a) + (b): soundness and monotonicity on random graphs
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_certificate_sandwich_and_monotone_history(seed):
+    g = erdos_renyi(48, 0.15, seed=seed)
+    if g.n_edges == 0:
+        return
+    res = refine(g, target_gap=0.02, max_rounds=250)
+    rho_star = oracle_check(g, res.certificate)  # density <= rho* <= dual
+    assert res.density >= res.seed_density  # exact-rational guard
+    assert g.subgraph_density(res.mask) == pytest.approx(res.density,
+                                                         rel=1e-9)
+    densities = [h.density for h in res.history]
+    gaps = [h.rel_gap for h in res.history]
+    assert all(a <= b for a, b in zip(densities, densities[1:]))
+    assert all(a >= b for a, b in zip(gaps, gaps[1:]))
+    if res.proved_optimal:
+        assert res.density == pytest.approx(rho_star, abs=1e-9)
+
+
+def test_dual_bound_upper_bounds_exact_always():
+    """The dual bound holds at EVERY round count, not just at convergence."""
+    g = planted_dense(120, 15, seed=3)[0]
+    rho_star, _ = exact_densest(g)
+    for rounds in (1, 2, 5, 20):
+        res = refine(g, target_gap=-1.0, max_rounds=rounds)
+        assert res.rounds == rounds
+        assert res.dual_bound >= rho_star - 1e-9
+        assert res.density <= rho_star + 1e-9
+
+
+def test_refined_at_least_seed_with_custom_seed():
+    g = erdos_renyi(80, 0.12, seed=11)
+    seed = pbahmani(g, eps=0.5)  # a deliberately weak (2+2eps) seed
+    res = refine(g, target_gap=0.05, max_rounds=200, eps=0.5, seed=seed)
+    assert res.density >= res.seed_density
+    rho_star, _ = exact_densest(g)
+    assert res.density >= (1 - 0.05) * rho_star - 1e-9 or not res.converged
+
+
+# ---------------------------------------------------------------------------
+# (c) near-exactness on enumerable graphs
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_matches_exact_within_target_gap_small(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))  # <= 8 vertices
+    g = erdos_renyi(n, float(rng.uniform(0.2, 0.9)), seed=seed)
+    target = 0.02
+    res = refine(g, target_gap=target, max_rounds=500)
+    if g.n_edges == 0:
+        assert res.density == 0.0 and res.proved_optimal
+        return
+    rho_star, _ = exact_densest(g)
+    assert res.converged, (seed, res.rel_gap)
+    # rel_gap <= target certifies density >= (1 - target) * rho*
+    assert res.density >= (1 - target) * rho_star - 1e-9
+    assert res.density <= rho_star + 1e-9
+    assert res.dual_bound >= rho_star - 1e-9
+
+
+def test_triangle_proves_optimal_round_one():
+    tri = Graph.from_edges(np.array([[0, 1], [1, 2], [0, 2]]))
+    res = refine(tri, target_gap=0.0, max_rounds=10)
+    assert res.proved_optimal and res.rounds == 1
+    assert res.density == 1.0 and res.dual_bound == 1.0
+
+
+def test_empty_and_edgeless_graphs():
+    res = refine(Graph.from_edges(np.zeros((0, 2)), n_nodes=0))
+    assert res.density == 0.0 and res.proved_optimal
+    res = refine(Graph.from_edges(np.zeros((0, 2)), n_nodes=5))
+    assert res.density == 0.0 and res.proved_optimal and res.rounds == 0
+
+
+def test_pbahmani_refine_rounds_param():
+    g = planted_dense(200, 20, seed=4)[0]
+    rho_pb, _, passes_pb = pbahmani(g)
+    rho_r, mask_r, passes_r = pbahmani(g, refine_rounds=8)
+    assert rho_r >= rho_pb - 1e-9
+    assert passes_r > passes_pb  # counts the refinement rounds' passes
+    assert g.subgraph_density(mask_r) == pytest.approx(rho_r, rel=1e-9)
+    rho_star, _ = exact_densest(g)
+    assert rho_r <= rho_star + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# (d) bit-identity: numpy oracle and fused parity
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_numpy_round_oracle_bit_identical(seed):
+    g = erdos_renyi(40, 0.2, seed=seed)
+    if g.n_edges == 0:
+        return
+    n = g.n_nodes
+    deg = g.degrees().astype(np.int32)
+    loads_d = jnp.zeros(n, jnp.int32)
+    loads_h = np.zeros(n, np.int64)
+    bd = jnp.asarray(0.0, jnp.float32)
+    be = jnp.asarray(0, jnp.int32)
+    bv = jnp.asarray(0, jnp.int32)
+    bm = jnp.zeros(n, dtype=bool)
+    ps = jnp.asarray(0, jnp.int32)
+    best_h = (np.float32(0.0), 0, 0, np.zeros(n, dtype=bool))
+    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+    ne = jnp.asarray(g.n_edges, jnp.int32)
+    for _ in range(4):
+        loads_d, bd, be, bv, bm, ps = _refine_round_jit(
+            src, dst, jnp.asarray(deg), ne, loads_d, bd, be, bv, bm, ps,
+            n, 0.0)
+        loads_h, best_h, _ = refine_round_np(
+            g.src, g.dst, deg, g.n_edges, loads_h, best_h, 0.0)
+        assert np.array_equal(np.asarray(loads_d), loads_h)
+        assert float(bd) == float(best_h[0])
+        assert (int(be), int(bv)) == (best_h[1], best_h[2])
+        assert np.array_equal(np.asarray(bm), best_h[3])
+
+
+def test_fused_refine_parity_dense_and_sparse():
+    """Fixed-round group refinement == per-tenant solo refinement, bit for
+    bit — on a dense (GEMV rounds) bucket and a sparse (COO rounds) one."""
+    rng = np.random.default_rng(1)
+    for n_nodes, capacity in ((96, 256), (1024, 4096)):  # dense / sparse
+        pool = FusedPool()
+        seq, fus = [], {}
+        for i in range(3):
+            e = rng.integers(0, n_nodes, (4 * n_nodes, 2))
+            s = DeltaEngine(n_nodes, capacity=capacity,
+                            refresh_every=10**9)
+            f = FusedEngine(f"t{i}", pool, n_nodes, capacity=capacity,
+                            refresh_every=10**9)
+            s.apply_updates(insert=e)
+            f.apply_updates(insert=e)
+            seq.append(s)
+            fus[f"t{i}"] = f
+        batch = next(iter(fus.values())).batch
+        assert batch.dense == (n_nodes == 96)  # exercise both round paths
+        solo = [s.query(refine=True, target_gap=-1.0, max_refine_rounds=7)
+                for s in seq]
+        group = query_group(fus, refine=True, target_gap=-1.0,
+                            max_refine_rounds=7)
+        for i, a in enumerate(solo):
+            b = group[f"t{i}"]
+            ca, cb = a.certificate, b.certificate
+            assert (ca.best_ne, ca.best_nv) == (cb.best_ne, cb.best_nv)
+            assert (ca.dual_num, ca.dual_den) == (cb.dual_num, cb.dual_den)
+            assert a.density == b.density
+            assert np.array_equal(a.mask, b.mask)
+            assert a.passes == b.passes
+
+
+# ---------------------------------------------------------------------------
+# (e) serving: engine, certified skip, service, zero recompiles
+# ---------------------------------------------------------------------------
+def test_engine_refined_query_certified_and_cached():
+    rng = np.random.default_rng(2)
+    eng = DeltaEngine(120, refresh_every=10**9)
+    eng.apply_updates(insert=rng.integers(0, 120, (500, 2)))
+    plain = eng.query()
+    q = eng.query(refine=True, target_gap=0.05, max_refine_rounds=300)
+    assert q.certificate is not None and q.certificate.rel_gap <= 0.05
+    assert q.density >= plain.density - 1e-6
+    assert q.refine_rounds > 0
+    # memoized until the graph changes; the plain cache is untouched
+    assert eng.query(refine=True, target_gap=0.05) is q
+    assert eng.query() is plain
+    g = Graph.from_edges(np.stack(eng.buffer.host_view(), 1)[
+        : eng.buffer.n_edges], n_nodes=120)
+    rho_star, _ = exact_densest(g)
+    assert q.density <= rho_star + 1e-9 <= q.certificate.dual_bound + 2e-9
+    assert eng.metrics.n_refine_queries == 1
+    assert eng.metrics.refine_rounds_total == q.refine_rounds
+
+
+def test_certified_skip_on_deletions_but_not_inserts():
+    """The ROADMAP early-exit item: a proved certificate answers
+    deletion-only follow-ups with zero device work; insertions shift the
+    bound and force a real refinement."""
+    tri = np.array([[0, 1], [1, 2], [0, 2]])
+    tail = np.array([[3, 4], [4, 5], [5, 6]])
+    eng = DeltaEngine(8, refresh_every=10**9)
+    eng.apply_updates(insert=np.concatenate([tri, tail]))
+    r1 = eng.query(refine=True, target_gap=0.0, max_refine_rounds=200)
+    assert r1.certificate.proves_optimal
+    compiles = DeltaEngine.compile_count()
+    eng.apply_updates(delete=np.array([[4, 5]]))
+    r2 = eng.query(refine=True, target_gap=0.0)
+    assert r2.certified_skip and r2.passes == 0
+    assert r2.density == 1.0 and r2.certificate.proves_optimal
+    # the skipped answer IS the exact optimum of the *current* graph
+    g = Graph.from_edges(np.concatenate([tri, tail[[0, 2]]]), n_nodes=8)
+    rho_star, _ = exact_densest(g)
+    assert r2.density == pytest.approx(rho_star, abs=0)
+    assert DeltaEngine.compile_count() == compiles  # no device work at all
+    assert eng.metrics.n_certified_skips == 1
+    # an insertion incident to the optimum breaks the proof
+    eng.apply_updates(insert=np.array([[2, 3]]))
+    r3 = eng.query(refine=True, target_gap=0.0, max_refine_rounds=200)
+    assert not r3.certified_skip
+    assert eng.metrics.n_certified_skips == 1
+
+
+def test_refined_rounds_do_not_recompile_steady_state():
+    rng = np.random.default_rng(5)
+    eng = DeltaEngine(64, refresh_every=10**9)
+    eng.apply_updates(insert=rng.integers(0, 64, (300, 2)))
+    # warm every shape on the path: the steady-state update batch (the
+    # first insert regrew, so it never dispatched a batched scatter), the
+    # peel seed, and the refinement round
+    eng.apply_updates(insert=rng.integers(0, 64, (8, 2)))
+    eng.query(refine=True, target_gap=-1.0, max_refine_rounds=2)
+    compiles = DeltaEngine.compile_count()
+    eng.apply_updates(insert=rng.integers(0, 64, (8, 2)))
+    q = eng.query(refine=True, target_gap=-1.0, max_refine_rounds=40)
+    assert q.refine_rounds == 40
+    assert DeltaEngine.compile_count() == compiles
+
+
+def test_service_refined_density_response():
+    rng = np.random.default_rng(7)
+    svc = StreamService()
+    svc.create_tenant("a", 64)
+    svc.apply_updates("a", insert=rng.integers(0, 64, (200, 2)))
+    resp = svc.density("a", refine=True, target_gap=0.1,
+                       max_refine_rounds=300)
+    assert resp.ok
+    v = resp.value
+    assert v["certified_gap"] <= 0.1
+    assert v["dual_bound"] >= v["density"]
+    assert v["refine_rounds"] > 0 and not v["certified_skip"]
+    # the plain response stays certificate-free
+    assert "certified_gap" not in svc.density("a").value
+    stats = svc.stats("a").value
+    assert stats.n_refine_queries == 1
+
+
+def test_zero_max_rounds_is_floored_not_crashed():
+    """max_refine_rounds=0 must not dereference a missing certificate —
+    it floors to one round on every path (solo, fused group, service)."""
+    rng = np.random.default_rng(3)
+    eng = DeltaEngine(32, refresh_every=10**9)
+    eng.apply_updates(insert=rng.integers(0, 32, (100, 2)))
+    q = eng.query(refine=True, target_gap=-1.0, max_refine_rounds=0)
+    assert q.refine_rounds == 1 and q.certificate is not None
+    pool = FusedPool()
+    f = FusedEngine("t", pool, 32, refresh_every=10**9)
+    f.apply_updates(insert=rng.integers(0, 32, (100, 2)))
+    qf = f.query(refine=True, target_gap=-1.0, max_refine_rounds=0)
+    assert qf.refine_rounds == 1 and qf.certificate is not None
+    svc = StreamService()
+    svc.create_tenant("a", 32)
+    svc.apply_updates("a", insert=rng.integers(0, 32, (100, 2)))
+    resp = svc.density("a", refine=True, max_refine_rounds=0)
+    assert resp.ok and resp.value["refine_rounds"] == 1
+
+
+def test_refined_group_reuses_memoized_peel():
+    """A tenant whose plain query is already cached must not re-peel when
+    a refined group query follows — the cache seeds the refinement (same
+    contract as the solo path's self.query() reuse)."""
+    rng = np.random.default_rng(4)
+    pool = FusedPool()
+    eng = FusedEngine("t", pool, 64, refresh_every=10**9)
+    eng.apply_updates(insert=rng.integers(0, 64, (250, 2)))
+    plain = eng.query()
+    assert eng.metrics.n_queries == 1
+    q = query_group({"t": eng}, refine=True, target_gap=-1.0,
+                    max_refine_rounds=4)["t"]
+    # no second peel was counted; the refined result sits on top of it
+    assert eng.metrics.n_queries == 1
+    assert eng.metrics.n_refine_queries == 1
+    assert q.density >= plain.density - 1e-6
+    assert eng.query() is plain  # plain cache untouched
+
+
+def test_dual_fraction_exactness():
+    # balanced loads on a clique: proves optimality via the top-k average
+    loads = np.array([3, 3, 3, 0, 0])
+    num, den = dual_fraction(loads, 3)  # triangle after 3 rounds
+    cert = make_certificate(3, 3, num, den)
+    assert cert.proves_optimal and cert.dual_bound == 1.0
+    # the clique branch of the k-sweep caps small supports
+    num, den = dual_fraction(np.array([100, 0, 0]), 1)
+    assert num / den <= 100.0

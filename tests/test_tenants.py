@@ -195,6 +195,48 @@ def test_fused_ingest_group_parity():
         assert results[f"t{i}"].density == r.query().density
 
 
+def test_dense_ingest_is_one_dispatch(monkeypatch):
+    """ISSUE 5 satellite: the dense-bucket ingest fuses the COO scatter and
+    the adjacency scatter into ONE program — counted two ways: the batch's
+    dispatch counter tracks its ingest counter 1:1, and monkeypatched jit
+    entry points see exactly one launch per ingest."""
+    from repro.stream import fused as fused_mod
+
+    calls = []
+    real_dense = fused_mod._batched_apply_dense_jit
+    real_sparse = fused_mod._batched_apply_jit
+    monkeypatch.setattr(
+        fused_mod, "_batched_apply_dense_jit",
+        lambda *a, **k: (calls.append("dense"), real_dense(*a, **k))[1])
+    monkeypatch.setattr(
+        fused_mod, "_batched_apply_jit",
+        lambda *a, **k: (calls.append("sparse"), real_sparse(*a, **k))[1])
+
+    rng = np.random.default_rng(9)
+    n = 80
+    pool = FusedPool()
+    ref = DeltaEngine(n_nodes=n, refresh_every=10**9)
+    eng = FusedEngine("t0", pool, n, refresh_every=10**9)
+    seedb = rng.integers(0, n, (60, 2))
+    ref.apply_updates(insert=seedb)
+    eng.apply_updates(insert=seedb)
+    assert eng.batch.dense  # 80 nodes -> dense (GEMV) bucket
+    d0 = eng.batch.n_ingest_dispatches
+    calls.clear()
+    for _ in range(3):
+        ins = rng.integers(0, n, (16, 2))
+        ref.apply_updates(insert=ins)
+        eng.apply_updates(insert=ins)
+    assert calls == ["dense"] * 3  # one program per ingest, no second scatter
+    assert eng.batch.n_ingest_dispatches == d0 + 3
+    assert eng.batch.n_ingests == eng.batch.n_ingest_dispatches
+    # and the fused program's state matches the unbatched engine exactly
+    q_ref, q = ref.query(), eng.query()
+    assert q.density == q_ref.density
+    assert np.array_equal(q.mask, q_ref.mask)
+    assert q.passes == q_ref.passes
+
+
 def test_ingest_group_partial_failure_stays_consistent():
     """A failing tenant mid-ingest must not leave earlier tenants' device
     lanes stale: their host buffers already committed, so the staged rows
