@@ -6,11 +6,12 @@ export PYTHONPATH := src
 COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
 	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py \
-	tests/test_tenants.py tests/test_refine.py
+	tests/test_tenants.py tests/test_refine.py tests/test_obs.py
 
 .PHONY: test coverage lint bench-smoke bench-prune-smoke bench-shard-smoke \
 	bench-tenants-smoke bench-refine-smoke bench-density-smoke \
-	bench-epsilon-smoke bench-check bench-baseline bench deps-dev
+	bench-epsilon-smoke bench-check bench-baseline bench metrics-demo \
+	deps-dev
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,6 +21,7 @@ test:
 coverage:
 	$(PY) -m pytest -q $(COV_TESTS) \
 		--cov=repro.core --cov=repro.stream --cov=repro.refine \
+		--cov=repro.obs \
 		--cov-report=term-missing --cov-fail-under=75
 
 # ruff gate (needs ruff: `make deps-dev`); config in pyproject.toml
@@ -29,33 +31,33 @@ lint:
 # fast end-to-end sanity: the streaming benchmark at toy scale
 # (writes BENCH_stream.json — the benchmark-trajectory artifact)
 bench-smoke:
-	$(PY) benchmarks/bench_stream.py --smoke
+	$(PY) benchmarks/bench_stream.py --smoke --emit-metrics
 
 # candidate-pruning parity + zero-recompile sanity at toy scale
 bench-prune-smoke:
-	$(PY) benchmarks/bench_prune.py --smoke
+	$(PY) benchmarks/bench_prune.py --smoke --emit-metrics
 
 # sharded==single-device parity on a forced 4-device CPU mesh
 bench-shard-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-		$(PY) benchmarks/bench_shard.py --smoke
+		$(PY) benchmarks/bench_shard.py --smoke --emit-metrics
 
 # fused multi-tenant parity (batched == unbatched bit-identical) +
 # zero-recompile across tenant evict/join at toy scale
 bench-tenants-smoke:
-	$(PY) benchmarks/bench_tenants.py --smoke
+	$(PY) benchmarks/bench_tenants.py --smoke --emit-metrics
 
 # near-optimal refinement: certified duality-gap closure (monotone,
 # <= 1%), oracle sandwich vs exact, fused-rounds parity, zero recompiles
 bench-refine-smoke:
-	$(PY) benchmarks/bench_refine.py --smoke
+	$(PY) benchmarks/bench_refine.py --smoke --emit-metrics
 
 # quality-ratio trajectory cells (paper Tables 3 and 2 at CI scale)
 bench-density-smoke:
-	$(PY) benchmarks/bench_density.py --smoke
+	$(PY) benchmarks/bench_density.py --smoke --emit-metrics
 
 bench-epsilon-smoke:
-	$(PY) benchmarks/bench_epsilon.py --smoke
+	$(PY) benchmarks/bench_epsilon.py --smoke --emit-metrics
 
 # benchmark-trajectory gate: compare the BENCH_*.json files the smokes
 # wrote against the committed baseline (>25% regression fails)
@@ -71,6 +73,11 @@ bench-baseline: bench-smoke bench-prune-smoke bench-shard-smoke \
 
 bench:
 	$(PY) benchmarks/run.py
+
+# end-to-end observability demo: the fraud-rings example with tracing on,
+# finishing with the Prometheus exposition-format dump of the run
+metrics-demo:
+	$(PY) examples/streaming_fraud.py --emit-metrics
 
 deps-dev:
 	pip install -r requirements-dev.txt

@@ -41,7 +41,25 @@ def write_bench_json(name: str, metrics: dict, rows: list | None = None,
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True, default=_sanitize)
     print(f"# wrote {path}")
+    if os.environ.get("BENCH_EMIT_METRICS") == "1":
+        write_metrics_json(name)
     return path
 
 
-__all__ = ["write_bench_json"]
+def write_metrics_json(name: str) -> str:
+    """Write METRICS_<name>.json next to the BENCH artifact: the obs
+    registry + recompile-audit snapshot for this benchmark process.
+    ``check_regression.py`` fails the gate if any of these reports
+    ``audited_steady_recompiles > 0``. Opted into via ``--emit-metrics``
+    on the bench CLI (which sets ``BENCH_EMIT_METRICS=1``)."""
+    from repro.obs.export import snapshot
+
+    out_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
+    path = os.path.join(out_dir, f"METRICS_{name}.json")
+    with open(path, "w") as f:
+        json.dump(snapshot(), f, indent=2, sort_keys=True, default=_sanitize)
+    print(f"# wrote {path}")
+    return path
+
+
+__all__ = ["write_bench_json", "write_metrics_json"]

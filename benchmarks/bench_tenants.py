@@ -230,4 +230,6 @@ def main(smoke: bool = False, strict: bool = False) -> None:
 
 
 if __name__ == "__main__":
+    if "--emit-metrics" in sys.argv:
+        os.environ["BENCH_EMIT_METRICS"] = "1"
     main(smoke="--smoke" in sys.argv, strict="--strict" in sys.argv)

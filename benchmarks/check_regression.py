@@ -71,6 +71,28 @@ def load_bench_files(directory: str) -> dict[str, dict]:
     return out
 
 
+def check_metrics_files(directory: str) -> list[str]:
+    """Audit gate on METRICS_*.json (written under ``--emit-metrics``):
+    any smoke that reports ``audited_steady_recompiles > 0`` fails — the
+    recompile auditor attributed executable-cache growth to a (tenant,
+    op, shape) key it had already seen, i.e. the hot path recompiled.
+    Missing METRICS files pass (emission is opt-in per smoke)."""
+    failures = []
+    for path in sorted(glob.glob(os.path.join(directory, "METRICS_*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        steady = payload.get("audit", {}).get("audited_steady_recompiles", 0)
+        name = os.path.basename(path)
+        if steady > 0:
+            failures.append(
+                f"{name}: audited_steady_recompiles = {steady} (recompile "
+                f"auditor attributed steady-state cache growth — see the "
+                f"'records' list in the file for tenant/op/shape)")
+        else:
+            print(f"ok   {name}: audited_steady_recompiles = 0")
+    return failures
+
+
 def check(benches: dict, baseline: dict, tolerance: float) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
     failures = []
@@ -152,6 +174,7 @@ def main(argv=None) -> int:
         with open(args.baseline) as f:
             baseline = json.load(f)
     failures = check(benches, baseline, args.tolerance)
+    failures += check_metrics_files(args.dir)
     for msg in failures:
         print(f"FAIL {msg}", file=sys.stderr)
     if failures:

@@ -49,4 +49,8 @@ if __name__ == "__main__":
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(_root, "src"))
     sys.path.insert(0, _root)
+    if "--emit-metrics" in sys.argv:
+        # every bench's write_bench_json also writes METRICS_<name>.json
+        # (obs registry + recompile-audit snapshot) for the CI gate
+        os.environ["BENCH_EMIT_METRICS"] = "1"
     main()

@@ -91,6 +91,24 @@ def main():
           f"{DeltaEngine.compile_count()} executables compiled total")
     assert recall >= 0.9, "ring recovery failed"
 
+    if "--emit-metrics" in sys.argv:
+        # `make metrics-demo` path: dump the run's metric registry in
+        # Prometheus exposition format plus the per-tenant SLO snapshot
+        from repro.obs import prometheus_text
+
+        snap = svc.metrics_snapshot()
+        audit = snap["audit"]
+        print("\n# --- observability ---")
+        for name, t in snap["tenants"].items():
+            q = t["query_steady_ms"]
+            print(f"# {name}: steady query p50={q['p50']}ms "
+                  f"p99={q['p99']}ms (n={q['count']}), "
+                  f"peel passes={t['peel_passes_total']}")
+        print(f"# audit: {audit['compile_count_total']} executables, "
+              f"{audit['audited_steady_recompiles']} steady recompiles\n")
+        print(prometheus_text(), end="")
+        assert audit["audited_steady_recompiles"] == 0
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,33 @@
+"""repro.obs — unified observability: spans, exact-rank metrics, recompile
+audit, and Prometheus/JSON export. Host-side only by construction: nothing
+here dispatches to jax, so enabling tracing cannot change results or add
+steady-state recompiles (asserted in tests/test_obs.py)."""
+from repro.obs.audit import AUDITOR, AuditRecord, RecompileAuditor
+from repro.obs.export import prometheus_text, service_snapshot, snapshot, write_json
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BOUNDS_MS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import (
+    NOOP_SPAN,
+    Span,
+    SpanRecord,
+    Tracer,
+    configure,
+    get_tracer,
+    read_jsonl,
+    set_tracer,
+    span,
+)
+
+__all__ = [
+    "AUDITOR", "AuditRecord", "RecompileAuditor",
+    "prometheus_text", "service_snapshot", "snapshot", "write_json",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "DEFAULT_LATENCY_BOUNDS_MS",
+    "NOOP_SPAN", "Span", "SpanRecord", "Tracer",
+    "configure", "get_tracer", "set_tracer", "span", "read_jsonl",
+]

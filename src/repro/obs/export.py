@@ -1,0 +1,129 @@
+"""Exporters: Prometheus exposition text and JSON snapshots.
+
+Two consumers, one schema. ``snapshot()`` bundles the metrics registry
+dump with the recompile-audit summary into a JSON-ready dict — the thing
+``StreamService.metrics_snapshot()`` returns, benchmarks write next to
+their BENCH_*.json artifacts (METRICS_*.json), and
+``check_regression.py`` gates on (``audited_steady_recompiles`` must be
+0). ``prometheus_text()`` renders the same registry in the Prometheus
+exposition format — histograms emit cumulative ``_bucket{le=...}``
+series plus ``_sum``/``_count``, so a scraper recovers the exact integer
+bucket counts the quantiles were computed from.
+
+``service_snapshot(service)`` adds the serving-tier view on top: per
+tenant, the p50/p95/p99 query latency split into first-call vs steady
+series, peel-pass / refine-round counters, and the latest certified-gap
+gauge — the SLO surface ROADMAP's P1 serving tier asks for.
+"""
+from __future__ import annotations
+
+from repro.obs.audit import AUDITOR
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import get_tracer
+
+
+def _labels_text(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def _fmt(x: float) -> str:
+    # Prometheus wants plain decimals; ints stay ints for exactness.
+    if float(x) == int(x):
+        return str(int(x))
+    return repr(float(x))
+
+
+def prometheus_text(registry: MetricsRegistry | None = None) -> str:
+    """Render a registry in Prometheus exposition format."""
+    reg = registry if registry is not None else get_tracer().registry
+    by_name: dict[str, list] = {}
+    for m in reg.metrics():
+        by_name.setdefault(m.name, []).append(m)
+    lines: list[str] = []
+    for name in sorted(by_name):
+        series = by_name[name]
+        kind = ("counter" if isinstance(series[0], Counter) else
+                "gauge" if isinstance(series[0], Gauge) else "histogram")
+        lines.append(f"# TYPE {name} {kind}")
+        for m in series:
+            if isinstance(m, (Counter, Gauge)):
+                lines.append(f"{name}{_labels_text(m.labels)} {_fmt(m.value)}")
+                continue
+            acc = 0
+            for edge, c in zip(m.bounds, m.counts):
+                acc += c
+                lab = dict(m.labels, le=_fmt(edge))
+                lines.append(f"{name}_bucket{_labels_text(lab)} {acc}")
+            lab = dict(m.labels, le="+Inf")
+            lines.append(f"{name}_bucket{_labels_text(lab)} {m.total}")
+            lines.append(f"{name}_sum{_labels_text(m.labels)} {_fmt(m.sum)}")
+            lines.append(f"{name}_count{_labels_text(m.labels)} {m.total}")
+    return "\n".join(lines) + "\n"
+
+
+def snapshot(registry: MetricsRegistry | None = None) -> dict:
+    """Registry dump + audit summary, JSON-ready (the METRICS_*.json body)."""
+    reg = registry if registry is not None else get_tracer().registry
+    return {"metrics": reg.snapshot(), "audit": AUDITOR.snapshot()}
+
+
+def _hist_quantiles(h: Histogram | None) -> dict:
+    if h is None or h.total == 0:
+        return {"p50": None, "p95": None, "p99": None, "count": 0}
+    q = h.quantiles()
+    q["count"] = h.total
+    return q
+
+
+def service_snapshot(service) -> dict:
+    """Per-tenant SLO view for ``StreamService.metrics_snapshot()``.
+
+    Query latency quantiles come from the span-fed ``query_ms`` /
+    ``query_first_call_ms`` histograms (merged across engine labels per
+    tenant — exact integer bucket adds); counters and gauges are the
+    span-attribute feeds from trace.py.
+    """
+    from dataclasses import asdict
+
+    reg = get_tracer().registry
+    tenants = {}
+    for name in service.registry.names():
+        stats = service.registry.stats(name)
+        steady = reg.merged_histogram("query_ms", tenant=name)
+        first = reg.merged_histogram("query_first_call_ms", tenant=name)
+
+        def _counter_total(metric: str) -> int:
+            return sum(c.value for c in reg.find(metric, tenant=name)
+                       if isinstance(c, Counter))
+
+        gaps = [g.value for g in reg.find("certified_gap", tenant=name)
+                if isinstance(g, Gauge)]
+        tenants[name] = {
+            "query_steady_ms": _hist_quantiles(steady),
+            "query_first_call_ms": _hist_quantiles(first),
+            "peel_passes_total": _counter_total("peel_passes_total"),
+            "refine_rounds_total": _counter_total("refine_rounds_total"),
+            "certified_skips_total": _counter_total("certified_skips_total"),
+            "certified_gap": gaps[-1] if gaps else None,
+            "stats": asdict(stats),
+        }
+    out = snapshot(reg)
+    out["tenants"] = tenants
+    return out
+
+
+def write_json(path: str, data: dict | None = None) -> dict:
+    """Write a snapshot (default: the process-default one) to ``path``."""
+    import json
+
+    data = snapshot() if data is None else data
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, default=str)
+        f.write("\n")
+    return data
+
+
+__all__ = ["prometheus_text", "snapshot", "service_snapshot", "write_json"]

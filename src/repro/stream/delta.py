@@ -64,7 +64,6 @@ over the local devices; tenants opt in individually through the registry.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from dataclasses import replace as dc_replace
 from functools import lru_cache, partial
@@ -85,6 +84,8 @@ from repro.core.prune import (
     PrunePlan, _batched_bucket_peel_jit, _bucket_peel_jit, _plan_jit,
     build_plan, make_sharded_plan, pruned_peel_host,
 )
+from repro.obs.audit import AUDITOR
+from repro.obs.trace import span
 from repro.refine.certify import GapCertificate, make_certificate
 from repro.refine.engine import DEFAULT_TARGET_GAP, refine_resident
 from repro.refine.loads import REFINE_JITS
@@ -320,6 +321,23 @@ def _batched_warm_peel_jit(
     )(src, dst, deg, n_edges, prev_mask)
 
 
+def _jit_entry_points():
+    """Every jitted entry point the streaming engines can dispatch — the
+    registry the recompile auditor (repro.obs.audit) diffs around each op.
+    ``SHARDED_JITS``/``REFINE_JITS``/``FUSED_JITS`` are live lists that the
+    lru-cached factories append to, so the provider re-reads them each call;
+    fused is imported lazily to avoid a module cycle."""
+    from repro.stream import fused as _fused
+
+    return [_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit,
+            _bucket_peel_jit, _plan_jit, _batched_apply_jit,
+            _batched_warm_peel_jit, _batched_bucket_peel_jit] + list(
+        SHARDED_JITS) + list(REFINE_JITS) + list(_fused.FUSED_JITS)
+
+
+AUDITOR.register_provider(_jit_entry_points)
+
+
 @dataclass
 class UpdateStats:
     """Outcome of one ``apply_updates`` batch."""
@@ -331,6 +349,7 @@ class UpdateStats:
     regrew: bool          # buffer layout epoch changed (grow or tombstone
                           # compaction): device state was rebuilt whole
     latency_ms: float
+    compiled: bool = False  # this batch compiled a new executable (audit)
 
 
 @dataclass
@@ -349,6 +368,8 @@ class QueryResult:
     certificate: GapCertificate | None = None
     refine_rounds: int = 0
     certified_skip: bool = False  # cached bound proved equality: no peel ran
+    compiled: bool = False        # this query compiled a new executable, so
+                                  # latency_ms is a first-call number (audit)
 
 
 @dataclass
@@ -375,6 +396,12 @@ class EngineMetrics:
     refine_rounds_total: int = 0
     n_certified_skips: int = 0    # refined queries answered from the cached
                                   # certificate alone (no peel dispatched)
+    # cold-vs-warm split (repro.obs audit layer): query_ms_total keeps the
+    # historical combined number; the split un-conflates first-call compile
+    # time from steady-state latency
+    n_query_first_calls: int = 0
+    query_first_call_ms_total: float = 0.0
+    query_steady_ms_total: float = 0.0
 
 
 class DeltaEngine:
@@ -400,6 +427,10 @@ class DeltaEngine:
         self.refresh_every = int(refresh_every)
         self.pruned = bool(pruned)
         self.sharded = bool(sharded)
+        # observability identity: the registry overwrites ``tenant`` with the
+        # registered name; spans and audit records are labeled with it
+        self.tenant = "-"
+        self.kind = "sharded" if self.sharded else "delta"
         # sharded=True routes all device state through the shard_map engine:
         # edge slots partitioned over the mesh (per-device sentinel-padded
         # shards), |V|-sized state replicated, scalar state psum'd — one
@@ -442,6 +473,25 @@ class DeltaEngine:
         """Devices this tenant's edge slots are partitioned across."""
         return mesh_device_count(self.mesh) if self.mesh is not None else 1
 
+    def _audit_shape(self) -> tuple:
+        """Shape determinants of every executable this engine can dispatch
+        (audit keys extend it per op — batch width, plan buckets). A compile
+        under an already-seen (tenant, op, shape) key is a steady-state
+        recompile; anything that legitimately changes dispatch shapes MUST
+        appear here or the auditor raises false alarms."""
+        return (self.node_capacity, 2 * self.buffer.capacity,
+                self.eps, self.n_shards)
+
+    def _note_query_ms(self, ms: float, compiled: bool) -> None:
+        """Query-latency bookkeeping with the first-call/steady split."""
+        self.metrics.n_queries += 1
+        self.metrics.query_ms_total += ms
+        if compiled:
+            self.metrics.n_query_first_calls += 1
+            self.metrics.query_first_call_ms_total += ms
+        else:
+            self.metrics.query_steady_ms_total += ms
+
     def _resync_device(self) -> None:
         """Full O(|E|) upload — on first use, regrow, or epoch compaction.
         Sharded engines place the slot arrays partitioned over the mesh and
@@ -467,50 +517,62 @@ class DeltaEngine:
 
     # -- ingest -------------------------------------------------------------
     def apply_updates(self, insert=None, delete=None) -> UpdateStats:
-        t0 = time.perf_counter()
-        if insert is not None:
-            self._check_endpoints(insert)
-        if delete is not None:
-            self._check_endpoints(delete)
-        if self._generation < 0:
-            self._resync_device()
+        with span("ingest", tenant=self.tenant, engine=self.kind) as sp:
+            AUDITOR.sync()  # foreign cache growth is not this batch's fault
+            if insert is not None:
+                self._check_endpoints(insert)
+            if delete is not None:
+                self._check_endpoints(delete)
+            if self._generation < 0:
+                self._resync_device()
 
-        gen_before = self.buffer.generation
-        ins, ins_slots, dele, del_slots = self.buffer.apply(insert, delete)
-        regrew = self.buffer.generation != gen_before
+            gen_before = self.buffer.generation
+            ins, ins_slots, dele, del_slots = self.buffer.apply(insert, delete)
+            regrew = self.buffer.generation != gen_before
 
-        if regrew:
-            # capacity doubled or tombstones forced a compaction: the slot
-            # layout moved, rebuild device state whole (and invalidate the
-            # prune plan — its lane-width basis may be stale)
-            self._resync_device()
-            self._plan = None
-        else:
-            # pow-2 batch pad; sharded engines also need the batch divisible
-            # into per-device histogram slices (n_shards is pow-2)
-            row = _build_batch_row(
-                ins, ins_slots, dele, del_slots, self.buffer.capacity,
-                self.sentinel, b_floor=max(MIN_BATCH, self.n_shards))
-            b = row[0].shape[0]
-            self._dispatch_batch(*row)
-            self.metrics.shape_buckets.add((2 * self.buffer.capacity, b))
+            if regrew:
+                # capacity doubled or tombstones forced a compaction: the
+                # slot layout moved, rebuild device state whole (and
+                # invalidate the prune plan — its lane-width basis may be
+                # stale)
+                self._resync_device()
+                self._plan = None
+            else:
+                # pow-2 batch pad; sharded engines also need the batch
+                # divisible into per-device histogram slices (pow-2 shards)
+                row = _build_batch_row(
+                    ins, ins_slots, dele, del_slots, self.buffer.capacity,
+                    self.sentinel, b_floor=max(MIN_BATCH, self.n_shards))
+                b = row[0].shape[0]
+                self._dispatch_batch(*row)
+                self.metrics.shape_buckets.add((2 * self.buffer.capacity, b))
 
-        # staleness ages faster on delete-heavy batches: tombstone holes are
-        # what the epoch compaction exists to clean up (insert-only streams
-        # accumulate exactly 1 per batch — the historical cadence)
-        n_eff = int(ins.shape[0]) + int(dele.shape[0])
-        del_frac = (int(dele.shape[0]) / n_eff) if n_eff else 0.0
-        self._staleness += 1.0 + DELETE_STALENESS_WEIGHT * del_frac
-        self._cached_query = None  # graph changed: next query recomputes
-        self._cached_refined = None
-        if self._refine_cert is not None and ins.shape[0]:
-            # each inserted edge adds one unit of load to (at most) both
-            # endpoints of the averaged orientation, so the dual bound
-            # shifts by at most the max incident insert count — deletions
-            # only free load and leave it valid as-is (certify.py)
-            counts = np.bincount(ins.astype(np.int64).ravel())
-            self._cert_insert_slack += int(counts.max())
-        ms = (time.perf_counter() - t0) * 1e3
+            # staleness ages faster on delete-heavy batches: tombstone holes
+            # are what the epoch compaction exists to clean up (insert-only
+            # streams accumulate exactly 1 per batch — the historical
+            # cadence)
+            n_eff = int(ins.shape[0]) + int(dele.shape[0])
+            del_frac = (int(dele.shape[0]) / n_eff) if n_eff else 0.0
+            self._staleness += 1.0 + DELETE_STALENESS_WEIGHT * del_frac
+            self._cached_query = None  # graph changed: next query recomputes
+            self._cached_refined = None
+            if self._refine_cert is not None and ins.shape[0]:
+                # each inserted edge adds one unit of load to (at most) both
+                # endpoints of the averaged orientation, so the dual bound
+                # shifts by at most the max incident insert count — deletions
+                # only free load and leave it valid as-is (certify.py)
+                counts = np.bincount(ins.astype(np.int64).ravel())
+                self._cert_insert_slack += int(counts.max())
+            # the audit shape extends the engine key with the dispatched
+            # batch width (a new pow-2 width legitimately compiles once); a
+            # regrow rebuilt device state whole at the NEW capacity, which
+            # _audit_shape already reflects
+            shape = self._audit_shape() + (("resync",) if regrew else (b,))
+            compiled = AUDITOR.record(self.tenant, "ingest", shape)
+            sp.set("n_inserted", int(ins.shape[0]))
+            sp.set("n_deleted", int(dele.shape[0]))
+            sp.set("compiled", compiled)
+            ms = sp.elapsed_ms
         self.metrics.n_update_batches += 1
         self.metrics.update_ms_total += ms
         return UpdateStats(
@@ -520,6 +582,7 @@ class DeltaEngine:
             batch_capacity=0 if regrew else int(b),
             regrew=regrew,
             latency_ms=ms,
+            compiled=compiled,
         )
 
     def _dispatch_batch(self, slots, su, sv, du, dv, w) -> None:
@@ -644,35 +707,45 @@ class DeltaEngine:
         graph contracted past the hysteresis), rebuild device state, rebuild
         the prune plan (warm-started from the previous epoch's density), and
         re-anchor with a cold peel — compacted when the plan allows."""
-        t0 = time.perf_counter()
-        if self.buffer.epoch_compact(shrink=True):
-            self.metrics.n_buffer_shrinks += 1
-            self._plan = None  # lane-width sizing basis changed
-        self._resync_device()
-        self._staleness = 0.0
-        out = None
-        if self.pruned:
-            self._rebuild_plan()
-            if self._plan.enabled:
-                out = self._run_pruned_peel()
-        if out is not None:
-            density, mask, passes = out
-            pruned_flag = True
-        else:
-            final = self._cold_full_peel()
-            self._prev_mask = final.best_mask
-            density = float(final.best_density)
-            mask = np.asarray(final.best_mask)[: self.n_nodes]
-            passes = int(final.passes)
-            pruned_flag = False
-        ms = (time.perf_counter() - t0) * 1e3
+        with span("refresh", tenant=self.tenant, engine=self.kind) as sp:
+            AUDITOR.sync()
+            if self.buffer.epoch_compact(shrink=True):
+                self.metrics.n_buffer_shrinks += 1
+                self._plan = None  # lane-width sizing basis changed
+            self._resync_device()
+            self._staleness = 0.0
+            out = None
+            if self.pruned:
+                self._rebuild_plan()
+                if self._plan.enabled:
+                    out = self._run_pruned_peel()
+            if out is not None:
+                density, mask, passes = out
+                pruned_flag = True
+            else:
+                final = self._cold_full_peel()
+                self._prev_mask = final.best_mask
+                density = float(final.best_density)
+                mask = np.asarray(final.best_mask)[: self.n_nodes]
+                passes = int(final.passes)
+                pruned_flag = False
+            buckets = (self._plan.buckets
+                       if pruned_flag and self._plan is not None else None)
+            compiled = AUDITOR.record(
+                self.tenant, "refresh", self._audit_shape() + (buckets,))
+            sp.set("passes", passes).set("density", density)
+            sp.set("path", "pruned" if pruned_flag else "warm")
+            sp.set("compiled", compiled)
+            if pruned_flag:
+                sp.set("candidate_fraction", self.metrics.candidate_fraction)
+            ms = sp.elapsed_ms
         self.metrics.n_refreshes += 1
-        self.metrics.n_queries += 1
-        self.metrics.query_ms_total += ms
+        self._note_query_ms(ms, compiled)
         self._cached_query = QueryResult(
             density=density, mask=mask, passes=passes,
             warm_density=density, warm_mask=mask.copy(),
             refreshed=True, latency_ms=ms, pruned=pruned_flag,
+            compiled=compiled,
         )
         return self._cached_query
 
@@ -702,51 +775,60 @@ class DeltaEngine:
             self._resync_device()
         if self.stale:
             return self.refresh()
-        t0 = time.perf_counter()
-        if self.pruned:
-            if self._plan is None:
-                self._rebuild_plan()
-            out = self._run_pruned_peel() if self._plan.enabled else None
+        with span("query", tenant=self.tenant, engine=self.kind) as sp:
+            AUDITOR.sync()
+            out = None
+            if self.pruned:
+                if self._plan is None:
+                    self._rebuild_plan()
+                out = self._run_pruned_peel() if self._plan.enabled else None
             if out is not None:
                 density, mask, passes = out
-                ms = (time.perf_counter() - t0) * 1e3
-                self.metrics.n_queries += 1
-                self.metrics.query_ms_total += ms
-                self._cached_query = QueryResult(
-                    density=density, mask=mask, passes=passes,
-                    warm_density=density, warm_mask=mask.copy(),
-                    refreshed=False, latency_ms=ms, pruned=True,
-                )
-                return self._cached_query
-        if self.mesh is not None:
-            final, warm_rho = make_sharded_warm_peel(
-                self.mesh, self.node_capacity, self.eps)(
-                self._src, self._dst, self._deg,
-                jnp.asarray(self.buffer.n_edges, jnp.int32), self._prev_mask)
-        else:
-            final, warm_rho = _warm_peel_jit(
-                self._src, self._dst, self._deg,
-                jnp.asarray(self.buffer.n_edges, jnp.int32),
-                self._prev_mask, self.node_capacity, self.eps,
-            )
-        density = float(final.best_density)
-        warm_rho = float(warm_rho)
-        mask = np.asarray(final.best_mask)[: self.n_nodes]
-        if warm_rho > density:
-            warm_density = warm_rho
-            warm_mask = np.asarray(self._prev_mask)[: self.n_nodes]
-            # keep the stronger candidate as next query's warm seed
-        else:
-            warm_density = density
-            warm_mask = mask.copy()
-            self._prev_mask = final.best_mask
-        ms = (time.perf_counter() - t0) * 1e3
-        self.metrics.n_queries += 1
-        self.metrics.query_ms_total += ms
+                warm_density, warm_mask = density, mask.copy()
+                pruned_flag = True
+                # post-op plan: an in-flight bucket regrow already swapped it
+                # in via _absorb_pruned_result, so this IS what dispatched
+                buckets = self._plan.buckets
+                sp.set("candidate_fraction", self.metrics.candidate_fraction)
+            else:
+                if self.mesh is not None:
+                    final, warm_rho = make_sharded_warm_peel(
+                        self.mesh, self.node_capacity, self.eps)(
+                        self._src, self._dst, self._deg,
+                        jnp.asarray(self.buffer.n_edges, jnp.int32),
+                        self._prev_mask)
+                else:
+                    final, warm_rho = _warm_peel_jit(
+                        self._src, self._dst, self._deg,
+                        jnp.asarray(self.buffer.n_edges, jnp.int32),
+                        self._prev_mask, self.node_capacity, self.eps,
+                    )
+                density = float(final.best_density)
+                warm_rho = float(warm_rho)
+                mask = np.asarray(final.best_mask)[: self.n_nodes]
+                passes = int(final.passes)
+                if warm_rho > density:
+                    warm_density = warm_rho
+                    warm_mask = np.asarray(self._prev_mask)[: self.n_nodes]
+                    # keep the stronger candidate as next query's warm seed
+                else:
+                    warm_density = density
+                    warm_mask = mask.copy()
+                    self._prev_mask = final.best_mask
+                pruned_flag = False
+                buckets = None
+            compiled = AUDITOR.record(
+                self.tenant, "query", self._audit_shape() + (buckets,))
+            sp.set("passes", passes).set("density", density)
+            sp.set("path", "pruned" if pruned_flag else "warm")
+            sp.set("compiled", compiled)
+            ms = sp.elapsed_ms
+        self._note_query_ms(ms, compiled)
         self._cached_query = QueryResult(
-            density=density, mask=mask, passes=int(final.passes),
+            density=density, mask=mask, passes=passes,
             warm_density=warm_density, warm_mask=warm_mask,
-            refreshed=False, latency_ms=ms,
+            refreshed=False, latency_ms=ms, pruned=pruned_flag,
+            compiled=compiled,
         )
         return self._cached_query
 
@@ -769,21 +851,23 @@ class DeltaEngine:
         cert = self._refine_cert
         if cert is None or self._cert_mask is None:
             return None
-        t0 = time.perf_counter()
-        ne, nv = self._mask_counts(self._cert_mask)
-        if nv == 0:
-            return None
-        dual_num = cert.dual_num + self._cert_insert_slack * cert.dual_den
-        if ne * cert.dual_den < dual_num * nv:
-            return None
-        new_cert = make_certificate(ne, nv, dual_num, cert.dual_den)
-        self._refine_cert = new_cert  # re-anchored to the current graph
-        self._cert_insert_slack = 0
-        mask = self._cert_mask[: self.n_nodes].copy()
-        ms = (time.perf_counter() - t0) * 1e3
-        self.metrics.n_queries += 1
+        with span("refine", tenant=self.tenant, engine=self.kind) as sp:
+            ne, nv = self._mask_counts(self._cert_mask)
+            if nv == 0:
+                return None
+            dual_num = cert.dual_num + self._cert_insert_slack * cert.dual_den
+            if ne * cert.dual_den < dual_num * nv:
+                return None  # bound no longer proves equality: full path
+            new_cert = make_certificate(ne, nv, dual_num, cert.dual_den)
+            self._refine_cert = new_cert  # re-anchored to the current graph
+            self._cert_insert_slack = 0
+            mask = self._cert_mask[: self.n_nodes].copy()
+            sp.set("certified_skip", True).set("refine_rounds", 0)
+            sp.set("certified_gap", new_cert.rel_gap)
+            sp.set("path", "refined")
+            ms = sp.elapsed_ms
+        self._note_query_ms(ms, False)  # host-only: never a first call
         self.metrics.n_certified_skips += 1
-        self.metrics.query_ms_total += ms
         res = QueryResult(
             density=new_cert.density, mask=mask, passes=0,
             warm_density=new_cert.density, warm_mask=mask.copy(),
@@ -816,27 +900,39 @@ class DeltaEngine:
         if skip is not None:
             return skip
         q = self.query()  # exact eps-peel seed (pruned/warm path)
-        t0 = time.perf_counter()
-        seed_mask = np.zeros(self.node_capacity, dtype=bool)
-        seed_mask[: self.n_nodes] = q.mask
-        seed_ne, seed_nv = self._mask_counts(seed_mask)
-        src, dst, deg = self._refine_arrays()
-        cert, mask_full, passes, rounds, _ = refine_resident(
-            src, dst, deg, self.buffer.n_edges, self.node_capacity,
-            self.eps, seed_ne, seed_nv, seed_mask, q.passes, tg, max_rounds)
-        self._refine_cert = cert
-        self._cert_mask = mask_full.copy()
-        self._cert_insert_slack = 0
-        ms = (time.perf_counter() - t0) * 1e3
+        with span("refine", tenant=self.tenant, engine=self.kind) as sp:
+            AUDITOR.sync()  # the seed query above recorded its own growth
+            seed_mask = np.zeros(self.node_capacity, dtype=bool)
+            seed_mask[: self.n_nodes] = q.mask
+            seed_ne, seed_nv = self._mask_counts(seed_mask)
+            src, dst, deg = self._refine_arrays()
+            cert, mask_full, passes, rounds, _ = refine_resident(
+                src, dst, deg, self.buffer.n_edges, self.node_capacity,
+                self.eps, seed_ne, seed_nv, seed_mask, q.passes, tg,
+                max_rounds)
+            self._refine_cert = cert
+            self._cert_mask = mask_full.copy()
+            self._cert_insert_slack = 0
+            compiled = AUDITOR.record(
+                self.tenant, "refine", self._audit_shape())
+            sp.set("refine_rounds", rounds)
+            sp.set("certified_gap", cert.rel_gap)
+            sp.set("path", "refined").set("compiled", compiled)
+            ms = sp.elapsed_ms
         self.metrics.n_refine_queries += 1
         self.metrics.refine_rounds_total += rounds
         self.metrics.query_ms_total += ms
+        if compiled:
+            self.metrics.query_first_call_ms_total += ms
+        else:
+            self.metrics.query_steady_ms_total += ms
         mask = mask_full[: self.n_nodes].copy()
         res = QueryResult(
             density=cert.density, mask=mask, passes=passes,
             warm_density=cert.density, warm_mask=mask.copy(),
             refreshed=q.refreshed, latency_ms=q.latency_ms + ms,
             pruned=q.pruned, certificate=cert, refine_rounds=rounds,
+            compiled=compiled or q.compiled,
         )
         self._cached_refined = res
         return res
@@ -880,26 +976,13 @@ class DeltaEngine:
         """Total executables compiled for the engine's jitted entry points.
         Class-level: the jit caches are shared by every engine/tenant — that
         sharing is exactly what the registry's capacity bucketing buys.
-        Sharded entry points (one per mesh/width/bucket combination, kept in
-        ``SHARDED_JITS``) are counted too, so the zero-recompile contract
-        covers sharded tenants."""
-        total = 0
-        for fn in (_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit,
-                   _bucket_peel_jit, _plan_jit, _batched_apply_jit,
-                   _batched_warm_peel_jit, _batched_bucket_peel_jit):
-            total += fn._cache_size()
-        for fn in SHARDED_JITS:
-            total += fn._cache_size()
-        for fn in REFINE_JITS:
-            total += fn._cache_size()
-        # fused lane-management entry points (stream/fused.py) — imported
-        # lazily to avoid a module cycle; if the fused layer was never
-        # loaded its caches are empty anyway
-        from repro.stream import fused as _fused
 
-        for fn in _fused.FUSED_JITS:
-            total += fn._cache_size()
-        return total
+        Delegates to the recompile auditor (repro.obs.audit), which owns the
+        registry of entry points (``_jit_entry_points`` above: the static
+        jits plus the growing SHARDED/REFINE/FUSED lists) — direct cache-size
+        counting is deprecated because the scalar cannot say *which*
+        tenant/op/shape compiled; ``AUDITOR.snapshot()`` can."""
+        return AUDITOR.total_compile_count()
 
     def __repr__(self) -> str:  # pragma: no cover
         return (

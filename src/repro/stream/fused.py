@@ -47,7 +47,6 @@ ROADMAP follow-up.
 """
 from __future__ import annotations
 
-import time
 from collections import defaultdict
 from dataclasses import replace as dc_replace
 
@@ -62,6 +61,8 @@ from repro.core.pbahmani import PeelState
 from repro.core.prune import (
     _batched_bucket_peel_jit, merge_pruned_peel, prepare_pruned_peel,
 )
+from repro.obs.audit import AUDITOR
+from repro.obs.trace import get_tracer, span
 from repro.refine.certify import (
     better_fraction, dual_fraction, make_certificate, max_fraction,
 )
@@ -443,6 +444,15 @@ class FusedEngine(DeltaEngine):
         self.batch: TenantBatch | None = None
         self._lane: int | None = None
         self.fused = True
+        self.tenant = str(name)
+        self.kind = "fused"
+
+    def _audit_shape(self) -> tuple:
+        # the lane-stack width is a dispatch-shape determinant for every
+        # batched program this engine's ops can launch (a lane-stack grow
+        # legitimately compiles once for the new width)
+        lanes = self.batch.lanes if self.batch is not None else 0
+        return super()._audit_shape() + (lanes,)
 
     # -- device-state plumbing ---------------------------------------------
     def _sync_views(self) -> None:
@@ -555,8 +565,61 @@ def _flush(batch: TenantBatch, members, refine: bool = False,
     (same host prepare/merge, vmapped device recurrence). With ``refine``
     the peel results seed one batched refinement-round loop for the whole
     group (``_refine_flush``); the exact peel results still land in each
-    engine's plain query cache."""
-    t0 = time.perf_counter()
+    engine's plain query cache.
+
+    Observability: the flush is one span + one audit record attributed to
+    the *bucket* (tenant ``bucket:VxE``) — its dispatch shapes are group
+    properties (lane-stack width, pow-2 group sizes, plan-bucket shapes),
+    not any single member's. The per-member latency share carries the
+    flush's ``compiled`` flag into each engine's first-call/steady split."""
+    label = f"bucket:{batch.node_capacity}x{batch.edge_capacity}"
+    with span("fused_flush", tenant=label, engine="fused") as sp:
+        AUDITOR.sync()  # member refreshes/plan state ran under their own keys
+        out, refined, cached, audit_shape = _flush_body(
+            batch, members, refine, target_gap, max_refine_rounds)
+        compiled = AUDITOR.record(label, "fused_flush", audit_shape)
+        sp.set("members", len(members)).set("compiled", compiled)
+        if refine:
+            sp.set("path", "refined")
+        share = sp.elapsed_ms / max(len(members), 1)
+    # per-member feed into the metrics registry: the flush span is labeled
+    # with the *bucket*, so each tenant's SLO series (latency share,
+    # peel-pass/refine-round counters, certified-gap gauge) is fed here —
+    # the same series an unbatched engine's spans produce
+    tracer = get_tracer()
+    reg = tracer.registry
+    feed = tracer.enabled and reg.enabled
+    for name, eng in members:
+        if name not in cached:  # a cache hit is not a new peel query
+            q = out[name]
+            q.latency_ms = share
+            q.compiled = compiled
+            eng._note_query_ms(share, compiled)
+            eng._cached_query = q
+            if feed:
+                hist = "query_first_call_ms" if compiled else "query_ms"
+                reg.histogram(hist, tenant=eng.tenant,
+                              engine=eng.kind).observe(share)
+                if q.passes:
+                    reg.counter("peel_passes_total", tenant=eng.tenant,
+                                engine=eng.kind).inc(int(q.passes))
+        if refined is not None:
+            r = refined[name]
+            r.latency_ms = share
+            r.compiled = compiled
+            eng._cached_refined = r
+            if feed:
+                if r.refine_rounds:
+                    reg.counter("refine_rounds_total", tenant=eng.tenant,
+                                engine=eng.kind).inc(int(r.refine_rounds))
+                if r.certificate is not None:
+                    reg.gauge("certified_gap", tenant=eng.tenant,
+                              engine=eng.kind).set(float(r.certificate.rel_gap))
+    return refined if refined is not None else out
+
+
+def _flush_body(batch: TenantBatch, members, refine: bool,
+                target_gap: float | None, max_refine_rounds: int):
     out: dict[str, QueryResult] = {}
     warm: list = []
     dispatches: list = []
@@ -669,18 +732,19 @@ def _flush(batch: TenantBatch, members, refine: bool = False,
     if refine:
         refined = _refine_flush(batch, members, out, target_gap,
                                 max_refine_rounds)
-    share = (time.perf_counter() - t0) * 1e3 / max(len(members), 1)
-    for name, eng in members:
-        if name not in cached:  # a cache hit is not a new peel query
-            q = out[name]
-            q.latency_ms = share
-            eng.metrics.n_queries += 1
-            eng.metrics.query_ms_total += share
-            eng._cached_query = q
-        if refined is not None:
-            refined[name].latency_ms = share
-            eng._cached_refined = refined[name]
-    return refined if refined is not None else out
+    # every shape determinant of this flush's dispatches, for the audit key:
+    # lane-stack width (gather inputs), pow-2 gather/peel/refine group
+    # sizes, and the plan-bucket shapes actually bucket-peeled
+    bucket_sig = tuple(sorted(
+        (bk, next_pow2(len(items))) for bk, items in by_buckets.items()))
+    audit_shape = (
+        batch.node_capacity, batch.edge_capacity, batch.eps, batch.lanes,
+        next_pow2(len(pruned_lanes)) if pruned_lanes else 0,
+        next_pow2(len(warm)) if warm else 0,
+        bucket_sig,
+        next_pow2(max(len(members), 1)) if refine else 0,
+    )
+    return out, refined, cached, audit_shape
 
 
 def _refine_flush(batch: TenantBatch, members, peel_out,
@@ -879,7 +943,15 @@ def ingest_group(updates: dict[str, tuple], engines: dict[str, DeltaEngine]):
         # already committed, so its device lane MUST receive the row or
         # subsequent queries would silently peel stale degrees
         for batch, rows in rows_by_batch.items():
-            batch.ingest(rows)
+            label = f"bucket:{batch.node_capacity}x{batch.edge_capacity}"
+            with span("fused_ingest", tenant=label, engine="fused") as sp:
+                AUDITOR.sync()  # staged members recorded (no dispatch) above
+                b = batch.ingest(rows)
+                compiled = AUDITOR.record(
+                    label, "fused_ingest",
+                    (batch.node_capacity, batch.edge_capacity, batch.eps,
+                     batch.lanes, b))
+                sp.set("n_lanes", len(rows)).set("compiled", compiled)
     return stats
 
 

@@ -73,6 +73,12 @@ class TenantStats:
     n_refine_queries: int = 0
     refine_rounds_total: int = 0
     n_certified_skips: int = 0
+    # cold-vs-warm split (repro.obs audit layer): query_ms_total above keeps
+    # the historical combined number; these un-conflate first-call compile
+    # time from steady-state latency (the SLO-relevant series)
+    n_query_first_calls: int = 0
+    query_first_call_ms: float = 0.0
+    query_steady_ms: float = 0.0
 
 
 class GraphRegistry:
@@ -164,6 +170,7 @@ class GraphRegistry:
             eng = FusedEngine(name, self.fused_pool, **kwargs)
         else:
             eng = DeltaEngine(sharded=want_sharded, mesh=self.mesh, **kwargs)
+        eng.tenant = name  # label spans/audit records with the tenant name
         self._engines[name] = eng
         self._engines.move_to_end(name)
         while len(self._engines) > self.max_tenants:
@@ -236,6 +243,9 @@ class GraphRegistry:
             n_refine_queries=m.n_refine_queries,
             refine_rounds_total=m.refine_rounds_total,
             n_certified_skips=m.n_certified_skips,
+            n_query_first_calls=m.n_query_first_calls,
+            query_first_call_ms=m.query_first_call_ms_total,
+            query_steady_ms=m.query_steady_ms_total,
         )
 
     def all_stats(self) -> list[TenantStats]:

@@ -32,6 +32,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs.trace import span
 from repro.stream.buffer import MIN_CAPACITY
 from repro.stream.delta import DeltaEngine
 from repro.stream.fused import ingest_group, query_group
@@ -47,6 +48,8 @@ class ServiceResponse:
     latency_ms: float
     compiles: int          # total executables compiled so far (flat = healthy)
     error: str | None = None
+    compiled: bool = False  # this request compiled a new executable, so
+                            # latency_ms is a first-call number (obs audit)
 
 
 @dataclass
@@ -79,9 +82,13 @@ class StreamService:
         self._closed = False
 
     # -- plumbing -----------------------------------------------------------
-    def _respond(self, op: str, tenant: str | None, t0: float,
-                 value: Any = None, error: str | None = None) -> ServiceResponse:
-        ms = (time.perf_counter() - t0) * 1e3
+    def _respond(self, op: str, tenant: str | None, sp,
+                 value: Any = None, error: str | None = None,
+                 compiled: bool = False) -> ServiceResponse:
+        """Build the response from the op's *open* span (``sp.elapsed_ms``
+        is the request latency so far — one clock source for the response,
+        the span record, and the metrics registry)."""
+        ms = sp.elapsed_ms
         self.metrics.n_requests += 1
         self.metrics.latency_ms_total += ms
         per_op = self.metrics.by_op.setdefault(op, {"n": 0, "ms": 0.0})
@@ -89,9 +96,12 @@ class StreamService:
         per_op["ms"] += ms
         if error is not None:
             self.metrics.n_errors += 1
+            sp.set("error", error)
+        sp.set("compiled", compiled)
         return ServiceResponse(
             ok=error is None, op=op, tenant=tenant, value=value,
             latency_ms=ms, compiles=DeltaEngine.compile_count(), error=error,
+            compiled=compiled,
         )
 
     def _engine(self, tenant: str) -> DeltaEngine:
@@ -108,42 +118,47 @@ class StreamService:
         exact result instead). ``sharded=True`` opts the tenant into the
         shard_map engine — its graph spans the service's mesh at identical
         query results, lifting the one-chip memory cap."""
-        t0 = time.perf_counter()
-        try:
-            eng = self.registry.register(tenant, n_nodes, eps=eps,
-                                         capacity=capacity, pruned=pruned,
-                                         sharded=sharded)
-        except (ValueError, KeyError) as e:
-            return self._respond("create_tenant", tenant, t0, error=str(e))
-        return self._respond(
-            "create_tenant", tenant, t0,
-            value={"node_capacity": eng.node_capacity,
-                   "edge_capacity": eng.buffer.capacity,
-                   "n_shards": eng.n_shards},
-        )
+        with span("service", op="create_tenant", tenant=tenant) as sp:
+            try:
+                eng = self.registry.register(tenant, n_nodes, eps=eps,
+                                             capacity=capacity, pruned=pruned,
+                                             sharded=sharded)
+            except (ValueError, KeyError) as e:
+                return self._respond("create_tenant", tenant, sp,
+                                     error=str(e))
+            return self._respond(
+                "create_tenant", tenant, sp,
+                value={"node_capacity": eng.node_capacity,
+                       "edge_capacity": eng.buffer.capacity,
+                       "n_shards": eng.n_shards},
+            )
 
     # -- ingest -------------------------------------------------------------
     def apply_updates(self, tenant: str, insert=None,
                       delete=None) -> ServiceResponse:
-        t0 = time.perf_counter()
-        try:
-            stats = self._engine(tenant).apply_updates(insert=insert,
-                                                       delete=delete)
-        except (ValueError, KeyError) as e:
-            return self._respond("apply_updates", tenant, t0, error=str(e))
-        return self._respond("apply_updates", tenant, t0, value=stats)
+        with span("service", op="apply_updates", tenant=tenant) as sp:
+            try:
+                stats = self._engine(tenant).apply_updates(insert=insert,
+                                                           delete=delete)
+            except (ValueError, KeyError) as e:
+                return self._respond("apply_updates", tenant, sp,
+                                     error=str(e))
+            return self._respond("apply_updates", tenant, sp, value=stats,
+                                 compiled=stats.compiled)
 
     def ingest_many(self, updates: dict) -> ServiceResponse:
         """Apply many tenants' batches; fused tenants in the same capacity
         bucket share one ``[T, B]`` scatter program per flush.
         ``updates`` maps tenant -> (insert, delete)."""
-        t0 = time.perf_counter()
-        try:
-            engines = {t: self._engine(t) for t in updates}
-            stats = ingest_group(updates, engines)
-        except (ValueError, KeyError) as e:
-            return self._respond("ingest_many", None, t0, error=str(e))
-        return self._respond("ingest_many", None, t0, value=stats)
+        with span("service", op="ingest_many", tenant="-") as sp:
+            try:
+                engines = {t: self._engine(t) for t in updates}
+                stats = ingest_group(updates, engines)
+            except (ValueError, KeyError) as e:
+                return self._respond("ingest_many", None, sp, error=str(e))
+            return self._respond(
+                "ingest_many", None, sp, value=stats,
+                compiled=any(s.compiled for s in stats.values()))
 
     # -- queries ------------------------------------------------------------
     @staticmethod
@@ -170,29 +185,31 @@ class StreamService:
         response gains ``certified_gap`` / ``dual_bound`` /
         ``proved_optimal`` — an operator alarms on the gap exactly like on
         the compile counter."""
-        t0 = time.perf_counter()
-        try:
-            q = self._engine(tenant).query(
-                refine=refine, target_gap=target_gap,
-                max_refine_rounds=max_refine_rounds)
-        except (ValueError, KeyError) as e:
-            return self._respond("density", tenant, t0, error=str(e))
-        return self._respond("density", tenant, t0,
-                             value=self._density_value(q))
+        with span("service", op="density", tenant=tenant) as sp:
+            try:
+                q = self._engine(tenant).query(
+                    refine=refine, target_gap=target_gap,
+                    max_refine_rounds=max_refine_rounds)
+            except (ValueError, KeyError) as e:
+                return self._respond("density", tenant, sp, error=str(e))
+            return self._respond("density", tenant, sp,
+                                 value=self._density_value(q),
+                                 compiled=q.compiled)
 
     def membership(self, tenant: str, warm: bool = False) -> ServiceResponse:
-        t0 = time.perf_counter()
-        try:
-            q = self._engine(tenant).query()
-        except (ValueError, KeyError) as e:
-            return self._respond("membership", tenant, t0, error=str(e))
-        mask = q.warm_mask if warm else q.mask
-        return self._respond(
-            "membership", tenant, t0,
-            value={"mask": np.asarray(mask),
-                   "density": q.warm_density if warm else q.density,
-                   "n_members": int(np.asarray(mask).sum())},
-        )
+        with span("service", op="membership", tenant=tenant) as sp:
+            try:
+                q = self._engine(tenant).query()
+            except (ValueError, KeyError) as e:
+                return self._respond("membership", tenant, sp, error=str(e))
+            mask = q.warm_mask if warm else q.mask
+            return self._respond(
+                "membership", tenant, sp,
+                value={"mask": np.asarray(mask),
+                       "density": q.warm_density if warm else q.density,
+                       "n_members": int(np.asarray(mask).sum())},
+                compiled=q.compiled,
+            )
 
     def top_k_densest(self, k: int = 5) -> ServiceResponse:
         """Cross-tenant sweep, densest first. Fused tenants in the same
@@ -200,20 +217,22 @@ class StreamService:
         (query_group); unfused tenants peel individually — either way the
         steady state compiles nothing. ``k`` larger than the tenant count
         returns the whole leaderboard."""
-        t0 = time.perf_counter()
-        board = []
-        try:
-            engines = {name: self.registry.get(name)
-                       for name in list(self.registry.names())}
-            results = query_group(engines)
-            for name, q in results.items():
-                board.append({"tenant": name, "density": q.density,
-                              "warm_density": q.warm_density,
-                              "n_edges": engines[name].n_edges})
-        except (ValueError, KeyError) as e:
-            return self._respond("top_k_densest", None, t0, error=str(e))
-        board.sort(key=lambda r: -r["density"])
-        return self._respond("top_k_densest", None, t0, value=board[: int(k)])
+        with span("service", op="top_k_densest", tenant="-") as sp:
+            board = []
+            try:
+                engines = {name: self.registry.get(name)
+                           for name in list(self.registry.names())}
+                results = query_group(engines)
+                for name, q in results.items():
+                    board.append({"tenant": name, "density": q.density,
+                                  "warm_density": q.warm_density,
+                                  "n_edges": engines[name].n_edges})
+            except (ValueError, KeyError) as e:
+                return self._respond("top_k_densest", None, sp, error=str(e))
+            board.sort(key=lambda r: -r["density"])
+            return self._respond(
+                "top_k_densest", None, sp, value=board[: int(k)],
+                compiled=any(q.compiled for q in results.values()))
 
     # -- query coalescing ---------------------------------------------------
     def submit_density(self, tenant: str) -> int:
@@ -243,35 +262,37 @@ class StreamService:
         pending, self._pending = self._pending, []
         if not pending:
             return 0
-        t0 = time.perf_counter()
-        engines, errors = {}, {}
-        for _, tenant, _ in pending:
-            if tenant in engines or tenant in errors:
-                continue
-            try:
-                engines[tenant] = self.registry.get(tenant)
-            except KeyError as e:
-                errors[tenant] = str(e)
-        try:
-            results = query_group(engines)
-        except Exception:
-            # one tenant's failure must not orphan the whole flush's
-            # tickets: fall back to per-tenant queries so every ticket
-            # gets a response (the failing tenant gets its own error)
-            results = {}
-            for tenant, eng in engines.items():
+        with span("service", op="flush", tenant="-") as sp:
+            engines, errors = {}, {}
+            for _, tenant, _ in pending:
+                if tenant in engines or tenant in errors:
+                    continue
                 try:
-                    results[tenant] = eng.query()
-                except Exception as e:
+                    engines[tenant] = self.registry.get(tenant)
+                except KeyError as e:
                     errors[tenant] = str(e)
-        for ticket, tenant, _ in pending:
-            if tenant in errors:
+            try:
+                results = query_group(engines)
+            except Exception:
+                # one tenant's failure must not orphan the whole flush's
+                # tickets: fall back to per-tenant queries so every ticket
+                # gets a response (the failing tenant gets its own error)
+                results = {}
+                for tenant, eng in engines.items():
+                    try:
+                        results[tenant] = eng.query()
+                    except Exception as e:
+                        errors[tenant] = str(e)
+            sp.set("n_flushed", len(pending))
+            for ticket, tenant, _ in pending:
+                if tenant in errors:
+                    self._results[ticket] = self._respond(
+                        "density", tenant, sp, error=errors[tenant])
+                    continue
+                q = results[tenant]
                 self._results[ticket] = self._respond(
-                    "density", tenant, t0, error=errors[tenant])
-                continue
-            q = results[tenant]
-            self._results[ticket] = self._respond(
-                "density", tenant, t0, value=self._density_value(q))
+                    "density", tenant, sp, value=self._density_value(q),
+                    compiled=q.compiled)
         return len(pending)
 
     def shutdown(self) -> int:
@@ -286,13 +307,25 @@ class StreamService:
 
     # -- observability ------------------------------------------------------
     def stats(self, tenant: str | None = None) -> ServiceResponse:
-        t0 = time.perf_counter()
-        try:
-            value = (self.registry.all_stats() if tenant is None
-                     else self.registry.stats(tenant))
-        except KeyError as e:
-            return self._respond("stats", tenant, t0, error=str(e))
-        return self._respond("stats", tenant, t0, value=value)
+        with span("service", op="stats", tenant=tenant or "-") as sp:
+            try:
+                value = (self.registry.all_stats() if tenant is None
+                         else self.registry.stats(tenant))
+            except KeyError as e:
+                return self._respond("stats", tenant, sp, error=str(e))
+            return self._respond("stats", tenant, sp, value=value)
+
+    def metrics_snapshot(self) -> dict:
+        """Per-tenant SLO snapshot (repro.obs.export): p50/p95/p99 query
+        latency split into first-call vs steady series, peel-pass and
+        refine-round counters, the latest certified-gap gauge, plus the full
+        metrics-registry dump and the recompile audit
+        (``audited_steady_recompiles`` is the alarm — the steady state is
+        zero). JSON-ready; ``repro.obs.prometheus_text()`` renders the same
+        registry for a scraper."""
+        from repro.obs.export import service_snapshot
+
+        return service_snapshot(self)
 
 
 __all__ = ["StreamService", "ServiceResponse", "ServiceMetrics"]

@@ -45,16 +45,32 @@ except ModuleNotFoundError:
             seq = list(items)
             return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
 
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            span = float(max_value) - float(min_value)
+            return _Strategy(
+                lambda rng: float(min_value) + span * float(rng.random()))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                k = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(k)]
+
+            return _Strategy(draw)
+
     st = _St()
 
-    def given(*strategies):
+    def given(*strategies, **kw_strategies):
         def deco(fn):
             def wrapper():
                 n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
                 # seed from the test name: stable across runs and file moves
                 rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
                 for _ in range(n):
-                    fn(*(s.example(rng) for s in strategies))
+                    fn(*(s.example(rng) for s in strategies),
+                       **{k: s.example(rng)
+                          for k, s in kw_strategies.items()})
 
             # keep the test name but NOT __wrapped__: pytest must see a
             # zero-argument signature, not the strategy parameters
