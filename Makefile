@@ -6,12 +6,13 @@ export PYTHONPATH := src
 COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
 	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py \
-	tests/test_tenants.py tests/test_refine.py tests/test_obs.py
+	tests/test_tenants.py tests/test_refine.py tests/test_obs.py \
+	tests/test_kernels.py
 
 .PHONY: test coverage lint bench-smoke bench-prune-smoke bench-shard-smoke \
 	bench-tenants-smoke bench-refine-smoke bench-density-smoke \
-	bench-epsilon-smoke bench-check bench-baseline bench metrics-demo \
-	deps-dev
+	bench-epsilon-smoke bench-kernels-smoke bench-check bench-baseline \
+	bench metrics-demo deps-dev
 
 test:
 	$(PY) -m pytest -x -q
@@ -59,16 +60,21 @@ bench-density-smoke:
 bench-epsilon-smoke:
 	$(PY) benchmarks/bench_epsilon.py --smoke --emit-metrics
 
+# kernel tier (ISSUE 7): band-skip grid win, scatter-vs-MXU roofline,
+# kernel-on/off bit-identity, zero steady-state compiles
+bench-kernels-smoke:
+	$(PY) benchmarks/bench_kernels.py --smoke --emit-metrics
+
 # benchmark-trajectory gate: compare the BENCH_*.json files the smokes
 # wrote against the committed baseline (>25% regression fails)
 bench-check:
 	$(PY) benchmarks/check_regression.py
 
 # refresh benchmarks/baseline.json from the current BENCH_*.json files
-# (run the seven smokes first)
+# (run the eight smokes first)
 bench-baseline: bench-smoke bench-prune-smoke bench-shard-smoke \
 		bench-tenants-smoke bench-refine-smoke bench-density-smoke \
-		bench-epsilon-smoke
+		bench-epsilon-smoke bench-kernels-smoke
 	$(PY) benchmarks/check_regression.py --update
 
 bench:

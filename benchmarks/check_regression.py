@@ -40,6 +40,14 @@ QUALITY_TOL = 0.02
 GATES = {
     "stream": {"ingest_speedup": "higher", "steady_compiles": "zero"},
     "prune": {"speedup_max": "higher", "steady_compiles": "zero"},
+    # kernel tier (ISSUE 7): presorted_speedup is the deterministic
+    # executed-grid-cell ratio unsorted/sorted (band-skip win — tight
+    # tolerance, it is seeded and machine-portable); roofline_ratio is
+    # scatter-vs-MXU us/edge wall clock (interpret mode on CPU, so banded
+    # wide — trajectory signal, not an absolute target)
+    "kernels": {"presorted_speedup": ("higher", QUALITY_TOL),
+                "roofline_ratio": ("higher", 0.75),
+                "steady_compiles": "zero"},
     "shard": {"steady_compiles": "zero"},
     "tenants": {"fused_speedup_16": "higher", "steady_compiles": "zero"},
     # algorithmic-quality gates (deterministic seeded graphs, not wall

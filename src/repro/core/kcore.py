@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import (
+    assert_exact_envelope, peel_delta, resolve_kernel,
+)
 from repro.graphs.graph import Graph
 
 
@@ -37,8 +40,13 @@ class CoreState(NamedTuple):
     best_n_e: jax.Array      # int32 [] |E(S*)| (m_e in the paper)
 
 
-def _level_fixpoint(state: CoreState, src: jax.Array, dst: jax.Array, n_nodes: int) -> CoreState:
-    """Remove all vertices of degree <= k until none remain (inner while)."""
+def _level_fixpoint(
+    state: CoreState, src: jax.Array, dst: jax.Array, n_nodes: int,
+    kernel: bool = False,
+) -> CoreState:
+    """Remove all vertices of degree <= k until none remain (inner while).
+    ``kernel`` routes the degree decrement through the Pallas segment-sum
+    tier (core/dispatch.py) — bit-identical coreness either way."""
 
     def cond(s: CoreState) -> jax.Array:
         return jnp.any(s.active & (s.deg <= s.k))
@@ -52,9 +60,7 @@ def _level_fixpoint(state: CoreState, src: jax.Array, dst: jax.Array, n_nodes: i
         fail_s = failed[src_c] & live_edge
         fail_d = failed[dst_c] & live_edge
         removed_directed = jnp.sum((fail_s | fail_d).astype(jnp.int32))
-        delta_to_dst = jax.ops.segment_sum(
-            fail_s.astype(jnp.int32), jnp.minimum(dst, n_nodes), num_segments=n_nodes + 1
-        )[:n_nodes]
+        delta_to_dst = peel_delta(fail_s, dst, n_nodes, kernel)
         active_new = s.active & ~failed
         return s._replace(
             deg=jnp.where(active_new, s.deg - delta_to_dst, 0).astype(jnp.int32),
@@ -67,8 +73,11 @@ def _level_fixpoint(state: CoreState, src: jax.Array, dst: jax.Array, n_nodes: i
     return jax.lax.while_loop(cond, body, state)
 
 
-@partial(jax.jit, static_argnames=("n_nodes",))
-def _kcore_jit(src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: jax.Array) -> CoreState:
+@partial(jax.jit, static_argnames=("n_nodes", "kernel"))
+def _kcore_jit(
+    src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: jax.Array,
+    kernel: bool = False,
+) -> CoreState:
     ones = jnp.ones_like(src, dtype=jnp.int32)
     deg = jax.ops.segment_sum(ones, src, num_segments=n_nodes + 1)[:n_nodes].astype(jnp.int32)
     state = CoreState(
@@ -98,21 +107,32 @@ def _kcore_jit(src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: jax.Array)
             best_n_v=jnp.where(better, s.n_v, s.best_n_v),
             best_n_e=jnp.where(better, s.n_e, s.best_n_e),
         )
-        s = _level_fixpoint(s, src, dst, n_nodes)
+        s = _level_fixpoint(s, src, dst, n_nodes, kernel)
         return s._replace(k=s.k + 1)
 
     return jax.lax.while_loop(cond, body, state)
 
 
-def kcore_decompose(graph: Graph) -> tuple[np.ndarray, float, int, int, int]:
+def kcore_decompose(
+    graph: Graph, kernel: bool | None = None,
+) -> tuple[np.ndarray, float, int, int, int]:
     """Returns (coreness [V], best_core_density, k*, m_v, m_e).
 
     The densest core is {v : coreness[v] >= k*}; its density is a
     2-approximation of rho* (lower-bounded by the largest core's density).
+    ``kernel`` selects the Pallas segment-sum tier (None = deploy default);
+    kernel mode feeds the cached dst-sorted view so the band-skip
+    precondition holds — identical outputs either way.
     """
+    kernel = resolve_kernel(kernel)
+    if kernel:
+        assert_exact_envelope(graph.src.shape[0], graph.n_nodes)
+        src_h, dst_h = graph.dst_sorted()
+    else:
+        src_h, dst_h = graph.src, graph.dst
     final = _kcore_jit(
-        jnp.asarray(graph.src), jnp.asarray(graph.dst), graph.n_nodes,
-        jnp.asarray(graph.n_edges, jnp.int32),
+        jnp.asarray(src_h), jnp.asarray(dst_h), graph.n_nodes,
+        jnp.asarray(graph.n_edges, jnp.int32), kernel,
     )
     return (
         np.asarray(final.coreness),

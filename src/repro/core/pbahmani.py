@@ -21,6 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.density import peel_threshold
+from repro.core.dispatch import (
+    assert_exact_envelope, peel_delta, resolve_kernel,
+)
 from repro.graphs.graph import Graph
 
 
@@ -64,12 +67,15 @@ def init_state(src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: int) -> Pe
 
 
 def pbahmani_pass(
-    state: PeelState, src: jax.Array, dst: jax.Array, n_nodes: int, eps: float
+    state: PeelState, src: jax.Array, dst: jax.Array, n_nodes: int,
+    eps: float, kernel: bool = False,
 ) -> PeelState:
     """One peeling pass: fail every live vertex with deg <= 2(1+eps)·rho.
 
     Edge-centric (load-balanced by construction — every edge does O(1) work,
-    replacing the paper's task-queue skew mitigation).
+    replacing the paper's task-queue skew mitigation). ``kernel`` selects
+    the Pallas segment-sum tier for the part-2 degree update
+    (core/dispatch.py); results are bit-identical either way.
     """
     thr = peel_threshold(state.n_e, state.n_v, eps)
     failed = state.active & (state.deg.astype(jnp.float32) <= thr)
@@ -81,18 +87,11 @@ def pbahmani_pass(
 
     fail_s = failed[src_c] & live_edge
     fail_d = failed[dst_c] & live_edge
-    # paper part 2: atomicSub on neighbor degrees -> one deterministic scatter
-    delta = jax.ops.segment_sum(
-        fail_s.astype(jnp.int32), jnp.minimum(src, n_nodes), num_segments=n_nodes + 1
-    )
-    # note: delta indexed by *src* counts edges (u->v) with u failed; the
-    # symmetric storage means the same information lands on dst via the mirror
-    # entry, so aggregating on dst of failed-src edges == aggregating fail_d on
-    # src. We decrement survivors by their count of failed neighbors:
-    delta_to_dst = jax.ops.segment_sum(
-        fail_s.astype(jnp.int32), jnp.minimum(dst, n_nodes), num_segments=n_nodes + 1
-    )[:n_nodes]
-    del delta
+    # paper part 2: atomicSub on neighbor degrees -> one deterministic
+    # reduction onto dst. fail_s aggregated on *dst* counts, per survivor,
+    # its failed neighbors (the mirror entry of every (u failed -> v) edge
+    # lands the same information symmetrically).
+    delta_to_dst = peel_delta(fail_s, dst, n_nodes, kernel)
 
     removed_directed = jnp.sum((fail_s | fail_d).astype(jnp.int32))
     n_e_new = state.n_e - removed_directed // 2
@@ -118,9 +117,10 @@ def pbahmani_pass(
     )
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+@partial(jax.jit, static_argnames=("n_nodes", "eps", "kernel"))
 def _pbahmani_jit(
-    src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: jax.Array, eps: float
+    src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: jax.Array,
+    eps: float, kernel: bool = False,
 ) -> PeelState:
     state = init_state(src, dst, n_nodes, n_edges)
 
@@ -128,14 +128,14 @@ def _pbahmani_jit(
         return s.n_v > 0
 
     def body(s: PeelState) -> PeelState:
-        return pbahmani_pass(s, src, dst, n_nodes, eps)
+        return pbahmani_pass(s, src, dst, n_nodes, eps, kernel)
 
     return jax.lax.while_loop(cond, body, state)
 
 
 def pbahmani(
     graph: Graph, eps: float = 0.0, pruned: bool = False,
-    refine_rounds: int = 0,
+    refine_rounds: int = 0, kernel: bool | None = None,
 ) -> tuple[float, np.ndarray, int]:
     """Run P-Bahmani. Returns (best_density, best_mask, passes).
 
@@ -153,19 +153,33 @@ def pbahmani(
     — use :func:`repro.refine.refine` directly for the duality-gap
     certificate and the anytime ``target_gap`` loop. ``passes`` then counts
     the seed peel's passes plus every refinement round's.
+
+    ``kernel=None`` resolves to the deploy default (on iff
+    ``PALLAS_INTERPRET=0``); ``True`` forces the Pallas segment-sum tier —
+    the edge lanes are then fed from ``graph.dst_sorted()`` (the cached
+    host-side sort) so the kernel's band-skip precondition holds without
+    any in-jit argsort, and the triple is bit-identical to the scatter
+    path.
     """
     if graph.n_nodes == 0:
         return 0.0, np.zeros(0, dtype=bool), 0
+    kernel = resolve_kernel(kernel)
+    if kernel:
+        assert_exact_envelope(graph.src.shape[0], graph.n_nodes)
     if pruned:
         from repro.core.prune import pbahmani_pruned
 
-        out = pbahmani_pruned(graph, eps=eps)
+        out = pbahmani_pruned(graph, eps=eps, kernel=kernel)
     else:
-        src = jnp.asarray(graph.src)
-        dst = jnp.asarray(graph.dst)
+        if kernel:
+            src_h, dst_h = graph.dst_sorted()
+            src, dst = jnp.asarray(src_h), jnp.asarray(dst_h)
+        else:
+            src = jnp.asarray(graph.src)
+            dst = jnp.asarray(graph.dst)
         final = _pbahmani_jit(
             src, dst, graph.n_nodes, jnp.asarray(graph.n_edges, jnp.int32),
-            float(eps))
+            float(eps), kernel)
         out = (
             float(final.best_density),
             np.asarray(final.best_mask),
@@ -176,7 +190,7 @@ def pbahmani(
 
         # negative target: run exactly refine_rounds rounds (deterministic)
         res = refine(graph, target_gap=-1.0, max_rounds=int(refine_rounds),
-                     eps=eps, seed=out)
+                     eps=eps, seed=out, kernel=kernel)
         return res.density, res.mask, res.passes
     return out
 

@@ -73,6 +73,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.density import degrees_from_coo, subgraph_density
+from repro.core.dispatch import assert_exact_envelope, resolve_kernel
 from repro.core.distributed import (
     DistCoreState, SHARDED_JITS, edge_sharding, make_kcore_level,
     make_peel_pass, mesh_device_count,
@@ -80,6 +81,8 @@ from repro.core.distributed import (
 from repro.core.kcore import CoreState, _level_fixpoint
 from repro.core.pbahmani import PeelState, pbahmani_pass
 from repro.graphs.graph import Graph
+from repro.kernels.compact import stream_compact
+from repro.kernels.ops import _INTERPRET
 from repro.utils.compat import shard_map_compat
 from repro.utils.num import next_pow2
 
@@ -130,13 +133,14 @@ def _ceil_level(rho: jax.Array) -> jax.Array:
     return jnp.maximum(jnp.ceil(rho).astype(jnp.int32), 1)
 
 
-@partial(jax.jit, static_argnames=("n_nodes",))
+@partial(jax.jit, static_argnames=("n_nodes", "kernel"))
 def _plan_jit(
     src: jax.Array,
     dst: jax.Array,
     prev_mask: jax.Array,
     n_edges: jax.Array,
     n_nodes: int,
+    kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Bootstrap rho~ and shrink to the ceil(rho~)-core.
 
@@ -174,7 +178,7 @@ def _plan_jit(
 
     def body(c: CoreState) -> CoreState:
         c = c._replace(k=_ceil_level(c.best_density) - 1)
-        c = _level_fixpoint(c, src, dst, n_nodes)  # the existing kcore sweep
+        c = _level_fixpoint(c, src, dst, n_nodes, kernel)  # kcore sweep
         rho_c = jnp.where(
             c.n_v > 0,
             c.n_e.astype(jnp.float32) / jnp.maximum(c.n_v, 1).astype(jnp.float32),
@@ -284,6 +288,10 @@ def build_plan(
     is in the lane bucket, which must stay strictly below the full lane
     width for pruning to pay off.
     """
+    # the whole exactness story (scatter AND kernel tier) rides on int32
+    # counts surviving f32 accumulation exactly; reject out-of-envelope
+    # shapes here, before any executable is sized for them
+    assert_exact_envelope(node_width, lane_width)
     cap_v = max(next_pow2(node_width), MIN_BUCKET_V)
     cap_e = max(next_pow2(lane_width) // 2, MIN_BUCKET_E)
     if observed is not None:
@@ -358,16 +366,30 @@ def _compact_edges(
     n_nodes: int,
     bucket_v: int,
     bucket_e: int,
+    kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Device-side remap of the subgraph induced by ``live_v`` into bucket
     arrays (used for the in-bucket ladder step, where the cumsum is cheap).
+    ``kernel`` routes the lane compaction through the Pallas prefix-sum
+    stream-compaction kernel (kernels/compact.py) instead of the XLA
+    cumsum+scatter; both pack survivors as a dense prefix in lane order
+    (overflow lanes drop, exactly like ``mode="drop"``), so the outputs are
+    bit-identical — and a dst-sorted parent bucket hands a dst-sorted child
+    to the next rung, because ``perm`` is monotone and order is preserved.
     Returns (perm, bucket_src, bucket_dst)."""
     src_c = jnp.minimum(src, n_nodes - 1)
     dst_c = jnp.minimum(dst, n_nodes - 1)
     valid = (src < n_nodes) & (dst < n_nodes)
     live = valid & live_v[src_c] & live_v[dst_c]
-    live_i = live.astype(jnp.int32)
     perm = jnp.cumsum(live_v.astype(jnp.int32)) - 1
+    if kernel:
+        packed = stream_compact(
+            jnp.stack(
+                [perm[src_c].astype(jnp.int32), perm[dst_c].astype(jnp.int32)],
+                axis=1),
+            live, out_size=bucket_e, fill=bucket_v, interpret=_INTERPRET)
+        return perm, packed[:, 0], packed[:, 1]
+    live_i = live.astype(jnp.int32)
     pos = jnp.where(live, jnp.cumsum(live_i) - 1, bucket_e)
     b_src = jnp.full(bucket_e, bucket_v, jnp.int32).at[pos].set(
         perm[src_c].astype(jnp.int32), mode="drop"
@@ -379,11 +401,12 @@ def _compact_edges(
 
 
 def _peel_to_end(
-    state: PeelState, src: jax.Array, dst: jax.Array, n_nodes: int, eps: float
+    state: PeelState, src: jax.Array, dst: jax.Array, n_nodes: int,
+    eps: float, kernel: bool = False,
 ) -> PeelState:
     return jax.lax.while_loop(
         lambda s: s.n_v > 0,
-        lambda s: pbahmani_pass(s, src, dst, n_nodes, eps),
+        lambda s: pbahmani_pass(s, src, dst, n_nodes, eps, kernel),
         state,
     )
 
@@ -396,25 +419,36 @@ def _staged_peel(
     eps: float,
     bucket_v: int,
     bucket_e: int,
+    kernel: bool = False,
 ) -> PeelState:
     """Peel at the current width until the live set fits (bucket_v,
     bucket_e), compact, and finish inside the smaller bucket. The returned
     state is in the *current* (n_nodes-wide) space; bit-identical to
     ``_peel_to_end`` on the same input by the invariant in the module
-    docstring."""
+    docstring (the ``kernel`` tier included — see ``_compact_edges``)."""
 
     def unfits(s: PeelState) -> jax.Array:
         return (s.n_v > 0) & ((s.n_v > bucket_v) | (2 * s.n_e > bucket_e))
 
     s1 = jax.lax.while_loop(
-        unfits, lambda s: pbahmani_pass(s, src, dst, n_nodes, eps), state
+        unfits, lambda s: pbahmani_pass(s, src, dst, n_nodes, eps, kernel),
+        state
     )
     perm, b_src, b_dst = _compact_edges(
-        src, dst, s1.active, n_nodes, bucket_v, bucket_e
+        src, dst, s1.active, n_nodes, bucket_v, bucket_e, kernel
     )
-    vslot = jnp.where(s1.active, perm, bucket_v)
-    b_deg = jnp.zeros(bucket_v, jnp.int32).at[vslot].set(s1.deg, mode="drop")
-    b_active = jnp.zeros(bucket_v, bool).at[vslot].set(True, mode="drop")
+    if kernel:
+        # survivors land as a dense prefix, so the live mask is arange<n_v
+        # and the degree pull is the same stream compaction (fill = 0 ==
+        # what the scatter writes in dead slots) — bit-identical arrays
+        b_deg = stream_compact(s1.deg, s1.active, out_size=bucket_v, fill=0,
+                               interpret=_INTERPRET)
+        b_active = jnp.arange(bucket_v, dtype=jnp.int32) < s1.n_v
+    else:
+        vslot = jnp.where(s1.active, perm, bucket_v)
+        b_deg = jnp.zeros(bucket_v, jnp.int32).at[vslot].set(
+            s1.deg, mode="drop")
+        b_active = jnp.zeros(bucket_v, bool).at[vslot].set(True, mode="drop")
     s2 = _peel_to_end(
         PeelState(
             deg=b_deg,
@@ -425,7 +459,7 @@ def _staged_peel(
             best_mask=jnp.zeros(bucket_v, dtype=bool),
             passes=s1.passes,
         ),
-        b_src, b_dst, bucket_v, eps,
+        b_src, b_dst, bucket_v, eps, kernel,
     )
     improved = s2.best_density > s1.best_density
     mask_back = s1.active & s2.best_mask[jnp.minimum(perm, bucket_v - 1)]
@@ -453,12 +487,17 @@ def _bucket_peel_body(
     bucket_v: int,
     bucket_v2: int,
     bucket_e2: int,
+    kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Peel the compacted subproblem to completion (with the ladder).
 
     The host compaction emits compact ids as a dense prefix, so the live
     mask is ``arange < n_v`` and degrees are one bucket-width histogram —
-    no full-lane-width work happens on device at all.
+    no full-lane-width work happens on device at all. ``kernel`` routes the
+    per-pass degree updates and the ladder compaction through the Pallas
+    tier (the host emits the bucket COO dst-sorted, and the ladder
+    preserves that order, so the band-skip precondition holds rung to
+    rung); the returned triple is bit-identical either way.
     """
     b_deg = degrees_from_coo(b_src, bucket_v)
     b_active = jnp.arange(bucket_v, dtype=jnp.int32) < n_v
@@ -472,27 +511,29 @@ def _bucket_peel_body(
             best_mask=jnp.zeros(bucket_v, dtype=bool),
             passes=passes.astype(jnp.int32),
         ),
-        b_src, b_dst, bucket_v, eps, bucket_v2, bucket_e2,
+        b_src, b_dst, bucket_v, eps, bucket_v2, bucket_e2, kernel,
     )
     return final.best_density, final.best_mask, final.passes
 
 
 @partial(jax.jit, static_argnames=(
-    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2"))
+    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2", "kernel"))
 def _bucket_peel_jit(
     b_src, b_dst, n_v, n_e, best_density, passes,
     eps: float, bucket_v: int, bucket_e: int, bucket_v2: int, bucket_e2: int,
+    kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     del bucket_e  # cache-key only: b_src already carries the lane shape
     return _bucket_peel_body(b_src, b_dst, n_v, n_e, best_density, passes,
-                             eps, bucket_v, bucket_v2, bucket_e2)
+                             eps, bucket_v, bucket_v2, bucket_e2, kernel)
 
 
 @partial(jax.jit, static_argnames=(
-    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2"))
+    "eps", "bucket_v", "bucket_e", "bucket_v2", "bucket_e2", "kernel"))
 def _batched_bucket_peel_jit(
     b_src, b_dst, n_v, n_e, best_density, passes,
     eps: float, bucket_v: int, bucket_e: int, bucket_v2: int, bucket_e2: int,
+    kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused multi-tenant bucket peel (ISSUE 4): vmap of the single-tenant
     ``_bucket_peel_body`` over a leading tenant axis of same-bucket
@@ -504,7 +545,7 @@ def _batched_bucket_peel_jit(
     del bucket_e
     return jax.vmap(
         lambda s, d, v, e, bd, p: _bucket_peel_body(
-            s, d, v, e, bd, p, eps, bucket_v, bucket_v2, bucket_e2)
+            s, d, v, e, bd, p, eps, bucket_v, bucket_v2, bucket_e2, kernel)
     )(b_src, b_dst, n_v, n_e, best_density, passes)
 
 
@@ -630,19 +671,25 @@ def _emit_buckets(
     bucket_e: int,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Remap the slots ``idx`` into sentinel(=bucket_v)-padded symmetric COO
-    bucket arrays. Returns (perm, bucket_src, bucket_dst)."""
+    bucket arrays, **emitted dst-sorted**: the kernel tier's band-skip
+    precondition, and — because the in-bucket compaction ladder preserves
+    lane order under a monotone relabel — it survives every ladder rung
+    without re-sorting. The scatter path's reductions are order-invariant
+    int32 sums, so reordering lanes changes nothing there. Returns (perm,
+    bucket_src, bucket_dst)."""
     k = idx.size
     if 2 * k > bucket_e or int(live_v.sum()) > bucket_v:
         raise ValueError("subproblem does not fit the requested buckets")
     perm = np.cumsum(live_v.astype(np.int64)) - 1
     bu = perm[u[idx]].astype(np.int32)
     bv_ = perm[v[idx]].astype(np.int32)
+    bs = np.concatenate([bu, bv_])
+    bd = np.concatenate([bv_, bu])
+    order = np.argsort(bd, kind="stable")
     b_src = np.full(bucket_e, bucket_v, np.int32)
     b_dst = np.full(bucket_e, bucket_v, np.int32)
-    b_src[:k] = bu
-    b_src[k:2 * k] = bv_
-    b_dst[:k] = bv_
-    b_dst[k:2 * k] = bu
+    b_src[:2 * k] = bs[order]
+    b_dst[:2 * k] = bd[order]
     return perm, b_src, b_dst
 
 
@@ -765,6 +812,7 @@ def pruned_peel_host(
     eps: float,
     plan: PrunePlan,
     mesh=None,
+    kernel: bool = False,
 ) -> tuple[float, np.ndarray, int, tuple[int, int], PrunePlan] | None:
     """The full pruned query: host pass-0 + compaction, device bucket peel,
     host merge. ``u, v`` are undirected host slot arrays (sentinel-padded),
@@ -780,7 +828,10 @@ def pruned_peel_host(
 
     With ``mesh`` the bucket peel runs sharded: bucket lanes partitioned
     over the mesh devices via ``_make_sharded_bucket_peel`` — same triple,
-    one tenant's candidate set spanning the mesh.
+    one tenant's candidate set spanning the mesh. ``kernel`` selects the
+    Pallas segment-sum tier inside the single-device bucket peel (the
+    bucket COO is emitted dst-sorted either way); the sharded path stays
+    on per-shard scatter — lanes are mesh-partitioned, not band-local.
     """
     prep = prepare_pruned_peel(u, v, deg, n_edges, eps, plan)
     if prep is None or isinstance(prep, tuple):
@@ -792,7 +843,7 @@ def pruned_peel_host(
             jnp.asarray(pd.b_src), jnp.asarray(pd.b_dst),
             jnp.asarray(pd.n_v1, jnp.int32), jnp.asarray(pd.n_e1, jnp.int32),
             jnp.asarray(pd.best_d1, jnp.float32), jnp.asarray(1, jnp.int32),
-            float(eps), *plan.buckets,
+            float(eps), *plan.buckets, kernel,
         )
     else:
         if plan.bucket_e % mesh_device_count(mesh):
@@ -813,16 +864,20 @@ def pruned_peel_host(
 def plan_for_graph(
     graph: Graph, prev_mask: np.ndarray | None = None,
     observed: tuple[int, int] | None = None,
+    kernel: bool = False,
 ) -> PrunePlan:
-    """Analyze a static graph: rho~ bootstrap + candidate core + buckets."""
+    """Analyze a static graph: rho~ bootstrap + candidate core + buckets.
+    ``kernel`` routes the analysis' core fixpoint through the Pallas tier
+    (fed the cached dst-sorted view) — the plan integers are identical."""
     n = graph.n_nodes
     if n == 0 or graph.n_edges == 0:
         return build_plan(0.0, 1, 0, 0, max(n, 1), max(graph.src.shape[0], 1))
     pm = (jnp.zeros(n, dtype=bool) if prev_mask is None
           else jnp.asarray(prev_mask, dtype=bool))
+    src_h, dst_h = graph.dst_sorted() if kernel else (graph.src, graph.dst)
     rho_lb, k, _, n_cand, ne_cand = _plan_jit(
-        jnp.asarray(graph.src), jnp.asarray(graph.dst), pm,
-        jnp.asarray(graph.n_edges, jnp.int32), n,
+        jnp.asarray(src_h), jnp.asarray(dst_h), pm,
+        jnp.asarray(graph.n_edges, jnp.int32), n, kernel,
     )
     return build_plan(
         float(rho_lb), int(k), int(n_cand), int(ne_cand),
@@ -832,16 +887,20 @@ def plan_for_graph(
 
 
 def pbahmani_pruned(
-    graph: Graph, eps: float = 0.0, plan: PrunePlan | None = None
+    graph: Graph, eps: float = 0.0, plan: PrunePlan | None = None,
+    kernel: bool | None = None,
 ) -> tuple[float, np.ndarray, int]:
     """Candidate-pruned P-Bahmani: bit-identical to ``pbahmani(graph, eps)``
-    (density, mask AND pass count), at bucket-width device cost."""
+    (density, mask AND pass count), at bucket-width device cost. ``kernel``
+    selects the Pallas segment-sum tier for the bucket peel (None = deploy
+    default) — same triple either way."""
+    kernel = resolve_kernel(kernel)
     if plan is None:
-        plan = plan_for_graph(graph)
+        plan = plan_for_graph(graph, kernel=kernel)
     if not plan.enabled or graph.n_nodes == 0:
         from repro.core.pbahmani import pbahmani
 
-        return pbahmani(graph, eps=eps)
+        return pbahmani(graph, eps=eps, kernel=kernel)
     half = graph.n_directed // 2
     # undirected slot view, one sentinel pad slot so empty graphs stay valid
     u = np.concatenate([
@@ -853,12 +912,13 @@ def pbahmani_pruned(
         np.asarray([graph.n_nodes], np.int64),
     ])
     res = pruned_peel_host(
-        u, v, graph.degrees().astype(np.int32), graph.n_edges, float(eps), plan
+        u, v, graph.degrees().astype(np.int32), graph.n_edges, float(eps),
+        plan, kernel=kernel,
     )
     if res is None:
         from repro.core.pbahmani import pbahmani
 
-        return pbahmani(graph, eps=eps)
+        return pbahmani(graph, eps=eps, kernel=kernel)
     density, mask, passes, _, _ = res
     return float(density), mask, passes
 

@@ -1,14 +1,19 @@
 # Pallas TPU kernels for the compute hot spots (DESIGN.md §3):
-#   segsum.py — blocked segment-sum via one-hot MXU matmul (the paper's
-#               part-2 atomicSub, GNN message passing, EmbeddingBag)
-#   ops.py    — jit wrappers (impl="pallas"|"xla"), ref.py — jnp oracles.
+#   segsum.py  — blocked segment-sum via one-hot MXU matmul (the paper's
+#                part-2 atomicSub, GNN message passing, EmbeddingBag)
+#   compact.py — tiled prefix sum + stream compaction (prune-bucket
+#                survivor compaction without the host round-trip)
+#   ops.py     — jit wrappers (impl="pallas"|"xla"), ref.py — jnp oracles.
+from repro.kernels.compact import prefix_sum, stream_compact
 from repro.kernels.ops import peel_update, segment_embed, segment_sum
 from repro.kernels.ref import peel_update_ref, segment_embed_ref, segment_sum_ref
 
 __all__ = [
     "peel_update",
+    "prefix_sum",
     "segment_embed",
     "segment_sum",
+    "stream_compact",
     "peel_update_ref",
     "segment_embed_ref",
     "segment_sum_ref",

@@ -7,8 +7,13 @@ Every op takes ``impl=`` selecting the backend:
                     dry-run so the lowered HLO stays backend-portable.
 
 Edges must be sorted by the segment id for the Pallas path — ``Graph`` caches
-a dst-sorted view (``graphs.graph.Graph.dst_sorted``); arbitrary callers can
-pass ``presorted=False`` to sort on the fly.
+a dst-sorted view (``graphs.graph.Graph.dst_sorted``) and ``EdgeBuffer``
+maintains one per epoch (``stream.buffer.EdgeBuffer.dst_sorted_state``);
+arbitrary callers can pass ``presorted=False`` to sort on the fly. That
+fallback argsorts *inside every call* of the compiled program, so it emits
+the ``kernel_unsorted_fallback_total`` obs counter (once per eager call, or
+once per trace when invoked under an outer jit) — silent per-pass re-sorts
+were exactly the bug that kept the kernel tier off the hot path (ISSUE 7).
 """
 from __future__ import annotations
 
@@ -117,18 +122,31 @@ def vp_segment_sum(values: jax.Array, seg_ids: jax.Array, num_segments: int):
     return out[:, 0] if squeeze else out
 
 
+def _note_unsorted(op: str) -> None:
+    """Count a presorted=False call into the obs registry: the in-jit
+    argsort is a hidden O(E log E) per-call cost, and the counter is how a
+    deployment notices a hot path quietly re-sorting every pass. Fires once
+    per eager call (or once per *trace* when the wrapper is invoked inside
+    an outer jit — still enough to surface the compiled program's sort)."""
+    try:  # host-only, never on the device path
+        from repro.obs.trace import get_tracer
+    except ImportError:  # pragma: no cover - obs is part of the repo
+        return
+    tracer = get_tracer()
+    reg = tracer.registry
+    if tracer.enabled and reg.enabled:
+        reg.counter("kernel_unsorted_fallback_total", op=op).inc()
+
+
 @partial(jax.jit, static_argnames=("num_segments", "impl", "presorted"))
-def segment_sum(
+def _segment_sum_jit(
     values: jax.Array,
     seg_ids: jax.Array,
     *,
     num_segments: int,
-    impl: str = "pallas",
-    presorted: bool = True,
+    impl: str,
+    presorted: bool,
 ) -> jax.Array:
-    """Deterministic segment-sum. See module docstring for ``impl``.
-    NOTE: the segment_output_sharding hint is applied by callers OUTSIDE
-    this jit (it must not leak into the jit cache key)."""
     if impl == "xla":
         return _ref.segment_sum_ref(values, seg_ids, num_segments)
     if not presorted:
@@ -140,7 +158,51 @@ def segment_sum(
     )
 
 
+def segment_sum(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    *,
+    num_segments: int,
+    impl: str = "pallas",
+    presorted: bool = True,
+) -> jax.Array:
+    """Deterministic segment-sum. See module docstring for ``impl``.
+    NOTE: the segment_output_sharding hint is applied by callers OUTSIDE
+    this jit (it must not leak into the jit cache key)."""
+    if not presorted:
+        _note_unsorted("segment_sum")
+    return _segment_sum_jit(values, seg_ids, num_segments=num_segments,
+                            impl=impl, presorted=presorted)
+
+
 @partial(jax.jit, static_argnames=("n_nodes", "impl", "presorted"))
+def _peel_update_jit(
+    src: jax.Array,
+    dst: jax.Array,
+    failed: jax.Array,
+    *,
+    n_nodes: int,
+    impl: str,
+    presorted: bool,
+) -> jax.Array:
+    if impl == "xla":
+        return _ref.peel_update_ref(src, dst, failed, n_nodes).astype(
+            jnp.int32)
+    src_c = jnp.minimum(src, n_nodes - 1)
+    valid = (src < n_nodes) & (dst < n_nodes)
+    vals = (failed[src_c] & valid).astype(jnp.float32)
+    if not presorted:
+        order = jnp.argsort(dst)
+        dst = jnp.take(dst, order)
+        vals = jnp.take(vals, order)
+    out = segment_sum_sorted(vals, dst, num_segments=n_nodes,
+                             interpret=_INTERPRET)
+    # the peel recurrence is int32 (exact counts < 2^24 — asserted at plan
+    # build by core.dispatch.assert_exact_envelope); cast at the op
+    # boundary so kernel-path degrees are bit-identical to the scatter path
+    return out.astype(jnp.int32)
+
+
 def peel_update(
     src: jax.Array,
     dst: jax.Array,
@@ -151,21 +213,41 @@ def peel_update(
     presorted: bool = True,
 ) -> jax.Array:
     """Paper part 2 (the OpenMP atomicSub loop): per-vertex count of failed
-    neighbors. ``src``/``dst`` are the symmetric COO arrays (sentinel-padded);
-    for the Pallas path they must be sorted by ``dst``."""
-    if impl == "xla":
-        return _ref.peel_update_ref(src, dst, failed, n_nodes)
-    src_c = jnp.minimum(src, n_nodes - 1)
-    valid = (src < n_nodes) & (dst < n_nodes)
-    vals = (failed[src_c] & valid).astype(jnp.float32)
+    neighbors, **int32** (the peel recurrence's dtype). ``src``/``dst`` are
+    the symmetric COO arrays (sentinel-padded); for the Pallas path they
+    must be sorted by ``dst``."""
     if not presorted:
-        order = jnp.argsort(dst)
-        dst = jnp.take(dst, order)
-        vals = jnp.take(vals, order)
-    return segment_sum_sorted(vals, dst, num_segments=n_nodes, interpret=_INTERPRET)
+        _note_unsorted("peel_update")
+    return _peel_update_jit(src, dst, failed, n_nodes=n_nodes, impl=impl,
+                            presorted=presorted)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "impl", "presorted"))
+def _segment_embed_jit(
+    table: jax.Array,
+    gather_ids: jax.Array,
+    seg_ids: jax.Array,
+    weights: jax.Array | None,
+    *,
+    num_segments: int,
+    impl: str,
+    presorted: bool,
+) -> jax.Array:
+    if impl == "xla":
+        return _ref.segment_embed_ref(table, gather_ids, seg_ids, weights, num_segments)
+    rows = jnp.take(table, jnp.minimum(gather_ids, table.shape[0] - 1), axis=0)
+    rows = rows.astype(jnp.float32)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(jnp.float32)
+    valid = (gather_ids >= 0) & (gather_ids < table.shape[0])
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    if not presorted:
+        order = jnp.argsort(seg_ids)
+        seg_ids = jnp.take(seg_ids, order)
+        rows = jnp.take(rows, order, axis=0)
+    return segment_sum_sorted(rows, seg_ids, num_segments=num_segments, interpret=_INTERPRET)
+
+
 def segment_embed(
     table: jax.Array,
     gather_ids: jax.Array,
@@ -180,19 +262,11 @@ def segment_embed(
 
     out[s, :] = sum over e with seg_ids[e]==s of weights[e] * table[gather_ids[e], :]
     """
-    if impl == "xla":
-        return _ref.segment_embed_ref(table, gather_ids, seg_ids, weights, num_segments)
-    rows = jnp.take(table, jnp.minimum(gather_ids, table.shape[0] - 1), axis=0)
-    rows = rows.astype(jnp.float32)
-    if weights is not None:
-        rows = rows * weights[:, None].astype(jnp.float32)
-    valid = (gather_ids >= 0) & (gather_ids < table.shape[0])
-    rows = jnp.where(valid[:, None], rows, 0.0)
     if not presorted:
-        order = jnp.argsort(seg_ids)
-        seg_ids = jnp.take(seg_ids, order)
-        rows = jnp.take(rows, order, axis=0)
-    return segment_sum_sorted(rows, seg_ids, num_segments=num_segments, interpret=_INTERPRET)
+        _note_unsorted("segment_embed")
+    return _segment_embed_jit(table, gather_ids, seg_ids, weights,
+                              num_segments=num_segments, impl=impl,
+                              presorted=presorted)
 
 
 __all__ = ["segment_sum", "peel_update", "segment_embed"]

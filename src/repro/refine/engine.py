@@ -75,7 +75,7 @@ def _seed_counts(mask: np.ndarray, u: np.ndarray, v: np.ndarray) -> tuple:
 def refine_resident(
     src, dst, deg, n_edges: int, n_nodes: int, eps: float,
     seed_ne: int, seed_nv: int, seed_mask: np.ndarray, seed_passes: int,
-    target_gap: float, max_rounds: int,
+    target_gap: float, max_rounds: int, kernel: bool = False,
 ) -> tuple[GapCertificate, np.ndarray, int, int, list]:
     """Run refinement rounds off device-resident COO arrays.
 
@@ -85,7 +85,9 @@ def refine_resident(
     negative target to run exactly ``max_rounds`` rounds (the deterministic
     fixed-budget mode benches and parity tests use). ``max_rounds`` is
     floored at 1: a certificate needs at least one load round for its dual
-    side.
+    side. ``kernel`` selects the Pallas segment-sum tier for the round's
+    reductions (the caller supplies dst-sorted lanes for its band-skip
+    envelope); certificates are bit-identical either way.
     """
     max_rounds = max(int(max_rounds), 1)
     loads = jnp.zeros(n_nodes, jnp.int32)
@@ -106,7 +108,7 @@ def refine_resident(
         (loads, best_density, best_ne, best_nv, best_mask,
          passes) = _refine_round_jit(
             src, dst, deg, n_edges, loads, best_density, best_ne, best_nv,
-            best_mask, passes, n_nodes, eps)
+            best_mask, passes, n_nodes, eps, kernel)
         rounds = t
         # host guard: the device best-tracking compares f32 densities; fold
         # the seed back in exactly so refined >= seed always holds
@@ -136,6 +138,7 @@ def refine(
     eps: float = 0.0,
     pruned: bool = False,
     seed: tuple[float, np.ndarray, int] | None = None,
+    kernel: bool | None = None,
 ) -> RefineResult:
     """Refine a static graph's densest-subgraph estimate toward rho*(G).
 
@@ -144,7 +147,12 @@ def refine(
     routes the seed through the candidate-pruned path). The result's
     ``density`` is certified within ``rel_gap`` of the optimum and is never
     below the seed's (exact-rational guard, not a float comparison).
+    ``kernel`` selects the Pallas segment-sum tier (None = deploy default);
+    kernel mode feeds ``graph.dst_sorted()`` lanes — same certificates.
     """
+    from repro.core.dispatch import resolve_kernel
+
+    kernel = resolve_kernel(kernel)
     n = graph.n_nodes
     if n == 0 or graph.n_edges == 0:
         cert = make_certificate(0, 0, 0, 1)
@@ -155,19 +163,23 @@ def refine(
     if seed is None:
         from repro.core.pbahmani import pbahmani
 
-        seed = pbahmani(graph, eps=eps, pruned=pruned)
+        seed = pbahmani(graph, eps=eps, pruned=pruned, kernel=kernel)
     seed_density, seed_mask, seed_passes = seed
     seed_mask = np.asarray(seed_mask, dtype=bool)
     half = graph.n_directed // 2
     seed_ne, seed_nv = _seed_counts(
         seed_mask, graph.src[:half], graph.dst[:half])
 
+    if kernel:
+        src_h, dst_h = graph.dst_sorted()
+    else:
+        src_h, dst_h = graph.src, graph.dst
     cert, mask_full, passes, rounds, history = refine_resident(
-        jnp.asarray(graph.src), jnp.asarray(graph.dst),
+        jnp.asarray(src_h), jnp.asarray(dst_h),
         jnp.asarray(graph.degrees().astype(np.int32)),
         graph.n_edges, n, float(eps),
         seed_ne, seed_nv, seed_mask, int(seed_passes),
-        float(target_gap), int(max_rounds),
+        float(target_gap), int(max_rounds), kernel,
     )
     return RefineResult(
         density=cert.density, mask=mask_full[:n], dual_bound=cert.dual_bound,

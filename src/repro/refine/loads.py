@@ -52,6 +52,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import peel_delta
+
 
 class RefinePeelState(NamedTuple):
     """Carry of one weighted-peel round. All arrays fixed-shape.
@@ -108,12 +110,14 @@ def _fold_best(state: RefinePeelState, n_e_new, n_v_new, active_new):
 
 def refine_pass(
     state: RefinePeelState, src: jax.Array, dst: jax.Array, n_nodes: int,
-    eps: float,
+    eps: float, kernel: bool = False,
 ) -> RefinePeelState:
     """One weighted peeling pass over the symmetric COO arrays: fail every
     live vertex with load+deg <= threshold (or achieving the live minimum),
     charge each dying edge to exactly one failing endpoint (smaller id wins
-    a tie), and decrement survivor degrees — ``pbahmani_pass`` plus loads."""
+    a tie), and decrement survivor degrees — ``pbahmani_pass`` plus loads.
+    ``kernel`` routes both reductions through the Pallas segment-sum tier
+    (core/dispatch.py); the trajectory is bit-identical either way."""
     key = (state.loads + state.deg).astype(jnp.float32)
     thr = refine_threshold(state.load_sum, state.n_e, state.n_v, eps)
     min_key = jnp.min(jnp.where(state.active, key, jnp.inf))
@@ -127,16 +131,16 @@ def refine_pass(
     fail_d = failed[dst_c] & live_edge
 
     # survivor degree decrement: mirror-entry aggregation as in pbahmani_pass
-    delta_to_dst = jax.ops.segment_sum(
-        fail_s.astype(jnp.int32), jnp.minimum(dst, n_nodes),
-        num_segments=n_nodes + 1)[:n_nodes]
+    delta_to_dst = peel_delta(fail_s, dst, n_nodes, kernel)
     # edge charging: (u->v) charges u iff u failed and (v survived or u<v);
-    # the mirror entry charges v in the symmetric case — exactly one of the
-    # two directed entries charges, so each undirected edge is counted once
-    assign_s = fail_s & (~fail_d | (src_c < dst_c))
-    inc = jax.ops.segment_sum(
-        assign_s.astype(jnp.int32), jnp.minimum(src, n_nodes),
-        num_segments=n_nodes + 1)[:n_nodes]
+    # exactly one of the two directed entries charges, so each undirected
+    # edge is counted once. Aggregated on *dst* via the mirror identity
+    # (lane (v->u) has fail_s'=fail_d, fail_d'=fail_s, src_c'=dst_c, so its
+    # src-side charge is exactly this lane's assign_d) — both reductions
+    # then run over the dst-sorted layout the kernel tier needs, and the
+    # integer result is identical to the historical src-side aggregation.
+    assign_d = fail_d & (~fail_s | (dst_c < src_c))
+    inc = peel_delta(assign_d, dst, n_nodes, kernel)
 
     removed_directed = jnp.sum((fail_s | fail_d).astype(jnp.int32))
     n_e_new = state.n_e - removed_directed // 2
@@ -160,7 +164,7 @@ def refine_pass(
 
 def refine_round_body(
     src, dst, deg, n_edges, loads, best_density, best_ne, best_nv,
-    best_mask, passes, n_nodes: int, eps: float,
+    best_mask, passes, n_nodes: int, eps: float, kernel: bool = False,
 ):
     """One full refinement round from the maintained degree array. Returns
     (loads, best_density, best_ne, best_nv, best_mask, passes); the host
@@ -182,33 +186,36 @@ def refine_round_body(
     )
     final = jax.lax.while_loop(
         lambda s: s.n_v > 0,
-        lambda s: refine_pass(s, src, dst, n_nodes, eps),
+        lambda s: refine_pass(s, src, dst, n_nodes, eps, kernel),
         state,
     )
     return (final.loads, final.best_density, final.best_ne, final.best_nv,
             final.best_mask, final.passes)
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+@partial(jax.jit, static_argnames=("n_nodes", "eps", "kernel"))
 def _refine_round_jit(src, dst, deg, n_edges, loads, best_density, best_ne,
-                      best_nv, best_mask, passes, n_nodes: int, eps: float):
+                      best_nv, best_mask, passes, n_nodes: int, eps: float,
+                      kernel: bool = False):
     return refine_round_body(src, dst, deg, n_edges, loads, best_density,
                              best_ne, best_nv, best_mask, passes, n_nodes,
-                             eps)
+                             eps, kernel)
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+@partial(jax.jit, static_argnames=("n_nodes", "eps", "kernel"))
 def _batched_refine_round_jit(src, dst, deg, n_edges, loads, best_density,
                               best_ne, best_nv, best_mask, passes,
-                              n_nodes: int, eps: float):
+                              n_nodes: int, eps: float,
+                              kernel: bool = False):
     """Fused multi-tenant refinement round: vmap of ``refine_round_body``
     over a leading tenant axis. The batched ``while_loop`` freezes converged
     lanes through ``select`` (a lane with n_v == 0 is an exact no-op pass),
     and every op is per-lane exact int32, so each lane's outputs are
-    bit-identical to ``_refine_round_jit`` on its row."""
+    bit-identical to ``_refine_round_jit`` on its row (the Pallas tier vmaps
+    cleanly — ``kernel=True`` batches the one-hot segsum per lane)."""
     return jax.vmap(
         lambda s, d, g, ne, lo, bd, be, bv, bm, p: refine_round_body(
-            s, d, g, ne, lo, bd, be, bv, bm, p, n_nodes, eps)
+            s, d, g, ne, lo, bd, be, bv, bm, p, n_nodes, eps, kernel)
     )(src, dst, deg, n_edges, loads, best_density, best_ne, best_nv,
       best_mask, passes)
 

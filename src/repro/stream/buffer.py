@@ -68,6 +68,8 @@ class EdgeBuffer:
         self._fresh: list[int] = list(range(capacity - 1, -1, -1))
         self._holes: list[int] = []
         self.generation = 0  # bumped on every grow/compact (shape/layout epoch)
+        self._version = 0    # bumped on every mutation (sorted-view cache key)
+        self._sorted_cache: tuple | None = None
 
     # -- properties ---------------------------------------------------------
     @property
@@ -144,6 +146,7 @@ class EdgeBuffer:
                 self._v[slot] = key[1]
                 inserted.append(key)
                 ins_slots.append(slot)
+        self._version += 1
         if (self.compact_threshold is not None
                 and len(self._holes) > self.compact_threshold * self.capacity):
             self.epoch_compact()
@@ -165,6 +168,7 @@ class EdgeBuffer:
         self._u, self._v = u, v
         self.capacity = new_capacity
         self.generation += 1
+        self._version += 1
 
     def shrink_target(self) -> int | None:
         """Pow-2 capacity an epoch shrink would land on, or None.
@@ -204,6 +208,7 @@ class EdgeBuffer:
         self._fresh = list(range(self.capacity - 1, len(pairs) - 1, -1))
         self._holes = []
         self.generation += 1
+        self._version += 1
         return shrunk
 
     # -- views --------------------------------------------------------------
@@ -236,6 +241,35 @@ class EdgeBuffer:
         valid = src[src < self.sentinel]
         deg = np.bincount(valid, minlength=node_capacity)
         return src, dst, deg[:node_capacity].astype(np.int32)
+
+    def dst_sorted_state(self, node_capacity: int) -> tuple[
+            np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, deg, lane_perm) — ``resident_state`` with the symmetric
+        COO lanes stably sorted by dst, the layout the Pallas kernel tier's
+        band-skip precondition wants (kernels/segsum.py). ``lane_perm[i]`` is
+        the sorted position of unsorted lane ``i`` (slot ``s`` occupies lanes
+        ``s`` and ``s + capacity``), so a delta engine can translate its
+        O(batch) slot patches into the sorted layout without re-uploading.
+
+        The tuple is a *snapshot*: cached until the next mutation, and
+        mutations patched through ``lane_perm`` land at the snapshot's
+        positions — the device copy drifts slightly out of sort order
+        mid-epoch (harmless: sortedness is a kernel *performance*
+        precondition, results stay bit-identical) and is repaired by the
+        next resync, which re-sorts from the current host state. Sentinel
+        (hole) lanes sort past every real vertex id, keeping the kernel's
+        dense-band prefix tight."""
+        key = (self._version, int(node_capacity))
+        if self._sorted_cache is not None and self._sorted_cache[0] == key:
+            return self._sorted_cache[1]
+        src, dst, deg = self.resident_state(node_capacity)
+        order = np.argsort(dst, kind="stable")
+        lane_perm = np.empty(order.size, dtype=np.int32)
+        lane_perm[order] = np.arange(order.size, dtype=np.int32)
+        out = (np.ascontiguousarray(src[order]),
+               np.ascontiguousarray(dst[order]), deg, lane_perm)
+        self._sorted_cache = (key, out)
+        return out
 
     def to_graph(self) -> Graph:
         """Materialize an immutable Graph (compacted) — the oracle view."""

@@ -75,6 +75,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.cbds import _cbds_jit
 from repro.core.density import induced_edge_count
+from repro.core.dispatch import assert_exact_envelope, resolve_kernel
 from repro.core.distributed import (
     SHARDED_JITS, flat_shard_index, make_sharded_warm_peel,
     mesh_device_count, validate_stream_mesh,
@@ -250,6 +251,23 @@ def _apply_batch_jit(src, dst, deg, slots, su, sv, du, dv, w, n_nodes: int):
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
+def _apply_batch_sorted_jit(src, dst, deg, p1, p2, su, sv, du, dv, w,
+                            n_nodes: int):
+    """O(batch) patch of the *dst-sorted* resident layout (kernel mode):
+    the host translates each slot to its two symmetric-COO lane positions
+    through the buffer's ``lane_perm`` snapshot (p1 = perm[slot], p2 =
+    perm[slot + capacity]; OOB = 2*capacity marks padding, dropped). The
+    degree histogram is the ordinary endpoint-keyed signed sum — identical
+    integers to ``_apply_batch_jit``, only the lane positions differ."""
+    src = src.at[p1].set(su, mode="drop").at[p2].set(sv, mode="drop")
+    dst = dst.at[p1].set(sv, mode="drop").at[p2].set(su, mode="drop")
+    d_u = jax.ops.segment_sum(w, jnp.minimum(du, n_nodes), num_segments=n_nodes + 1)
+    d_v = jax.ops.segment_sum(w, jnp.minimum(dv, n_nodes), num_segments=n_nodes + 1)
+    deg = (deg + d_u[:n_nodes] + d_v[:n_nodes]).astype(jnp.int32)
+    return src, dst, deg
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
 def _batched_apply_jit(src, dst, deg, slots, su, sv, du, dv, w, n_nodes: int):
     """Fused multi-tenant ingest (ISSUE 4): one vmapped scatter+histogram
     over the leading tenant axis ([T, 2*cap] slots, [T, B] batch rows).
@@ -269,10 +287,13 @@ def _warm_peel_body(
     prev_mask: jax.Array,
     n_nodes: int,
     eps: float,
+    kernel: bool = False,
 ) -> tuple[PeelState, jax.Array]:
     """Peel from the maintained degree array (skips the O(|E|) histogram of
     ``init_state``; bit-identical state, hence identical result) and
-    re-evaluate the previous best mask on the current graph."""
+    re-evaluate the previous best mask on the current graph. ``kernel``
+    routes the per-pass degree update through the Pallas tier (callers in
+    kernel mode keep the resident lanes dst-sorted) — same triple."""
     active = deg > 0
     n_v = jnp.sum(active.astype(jnp.int32))
     n_e = n_edges.astype(jnp.int32)
@@ -288,7 +309,7 @@ def _warm_peel_body(
     )
     final = jax.lax.while_loop(
         lambda s: s.n_v > 0,
-        lambda s: pbahmani_pass(s, src, dst, n_nodes, eps),
+        lambda s: pbahmani_pass(s, src, dst, n_nodes, eps, kernel),
         state,
     )
     warm_e = induced_edge_count(src, dst, prev_mask, n_nodes)
@@ -299,14 +320,17 @@ def _warm_peel_body(
     return final, warm_rho
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "eps"))
-def _warm_peel_jit(src, dst, deg, n_edges, prev_mask, n_nodes: int, eps: float):
-    return _warm_peel_body(src, dst, deg, n_edges, prev_mask, n_nodes, eps)
+@partial(jax.jit, static_argnames=("n_nodes", "eps", "kernel"))
+def _warm_peel_jit(src, dst, deg, n_edges, prev_mask, n_nodes: int, eps: float,
+                   kernel: bool = False):
+    return _warm_peel_body(src, dst, deg, n_edges, prev_mask, n_nodes, eps,
+                           kernel)
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "eps"))
+@partial(jax.jit, static_argnames=("n_nodes", "eps", "kernel"))
 def _batched_warm_peel_jit(
-    src, dst, deg, n_edges, prev_mask, n_nodes: int, eps: float
+    src, dst, deg, n_edges, prev_mask, n_nodes: int, eps: float,
+    kernel: bool = False,
 ) -> tuple[PeelState, jax.Array]:
     """Fused multi-tenant warm peel (ISSUE 4): vmap of ``_warm_peel_body``
     over the leading tenant axis. jax batches the inner ``while_loop`` by
@@ -317,7 +341,8 @@ def _batched_warm_peel_jit(
     to the unbatched ``_warm_peel_jit``; an empty lane (deg == 0) converges
     at pass 0 and never serializes the batch."""
     return jax.vmap(
-        lambda s, d, g, ne, pm: _warm_peel_body(s, d, g, ne, pm, n_nodes, eps)
+        lambda s, d, g, ne, pm: _warm_peel_body(
+            s, d, g, ne, pm, n_nodes, eps, kernel)
     )(src, dst, deg, n_edges, prev_mask)
 
 
@@ -416,6 +441,7 @@ class DeltaEngine:
         pruned: bool = True,
         sharded: bool = False,
         mesh=None,
+        kernel: bool | None = None,
     ):
         if n_nodes <= 0:
             raise ValueError("DeltaEngine needs n_nodes >= 1")
@@ -427,6 +453,11 @@ class DeltaEngine:
         self.refresh_every = int(refresh_every)
         self.pruned = bool(pruned)
         self.sharded = bool(sharded)
+        # kernel=None resolves to the deploy default (PALLAS_INTERPRET=0);
+        # sharded engines stay on per-shard scatter — their lanes are
+        # mesh-partitioned, not band-local, so the sorted-view machinery
+        # below does not apply (ROADMAP follow-up)
+        self.kernel = resolve_kernel(kernel) and not self.sharded
         # observability identity: the registry overwrites ``tenant`` with the
         # registered name; spans and audit records are labeled with it
         self.tenant = "-"
@@ -448,6 +479,7 @@ class DeltaEngine:
         self._src = None          # device int32 [2*capacity], sentinel-padded
         self._dst = None
         self._deg = None          # device int32 [node_capacity]
+        self._lane_perm = None    # kernel mode: unsorted lane -> sorted pos
         self._generation = -1     # buffer generation mirrored on device
         self._prev_mask = jnp.zeros(self.node_capacity, dtype=bool)
         self._staleness = 0.0     # delete-weighted batches since last refresh
@@ -480,7 +512,7 @@ class DeltaEngine:
         recompile; anything that legitimately changes dispatch shapes MUST
         appear here or the auditor raises false alarms."""
         return (self.node_capacity, 2 * self.buffer.capacity,
-                self.eps, self.n_shards)
+                self.eps, self.n_shards, self.kernel)
 
     def _note_query_ms(self, ms: float, compiled: bool) -> None:
         """Query-latency bookkeeping with the first-call/steady split."""
@@ -495,7 +527,21 @@ class DeltaEngine:
     def _resync_device(self) -> None:
         """Full O(|E|) upload — on first use, regrow, or epoch compaction.
         Sharded engines place the slot arrays partitioned over the mesh and
-        the degree array replicated, so no later call ever reshards."""
+        the degree array replicated, so no later call ever reshards. Kernel
+        mode uploads the buffer's dst-sorted snapshot instead (the Pallas
+        tier's band-skip precondition) and caches its lane permutation so
+        later batches patch the sorted layout in O(batch)."""
+        if self.kernel:
+            assert_exact_envelope(2 * self.buffer.capacity,
+                                  self.node_capacity)
+            src, dst, deg, lane_perm = self.buffer.dst_sorted_state(
+                self.node_capacity)
+            self._lane_perm = lane_perm
+            self._src = jnp.asarray(src)
+            self._dst = jnp.asarray(dst)
+            self._deg = jnp.asarray(deg)
+            self._generation = self.buffer.generation
+            return
         src, dst, deg = self.buffer.resident_state(self.node_capacity)
         if self.mesh is not None:
             self._src, self._dst, self._deg, self._prev_mask = (
@@ -572,6 +618,7 @@ class DeltaEngine:
             sp.set("n_inserted", int(ins.shape[0]))
             sp.set("n_deleted", int(dele.shape[0]))
             sp.set("compiled", compiled)
+            sp.set("kernel", self.kernel)
             ms = sp.elapsed_ms
         self.metrics.n_update_batches += 1
         self.metrics.update_ms_total += ms
@@ -588,7 +635,27 @@ class DeltaEngine:
     def _dispatch_batch(self, slots, su, sv, du, dv, w) -> None:
         """Apply one padded scatter row to the device-resident state. The
         fused multi-tenant engine overrides this to route the row into its
-        bucket's stacked [T, ...] arrays (stream/fused.py)."""
+        bucket's stacked [T, ...] arrays (stream/fused.py). Kernel mode
+        translates slot indices through the cached lane permutation so the
+        patch lands in the dst-sorted layout — the patched lanes may sit
+        out of sort order until the next resync re-sorts (a *performance*
+        drift only; the kernel recomputes its bands from the data, so
+        results stay bit-identical)."""
+        if self.kernel:
+            cap = self.buffer.capacity
+            s = np.asarray(slots)
+            real = s < cap  # pad marker is 2*cap
+            sc = np.minimum(s, cap - 1)
+            p1 = np.where(real, self._lane_perm[sc], 2 * cap).astype(np.int32)
+            p2 = np.where(real, self._lane_perm[sc + cap],
+                          2 * cap).astype(np.int32)
+            self._src, self._dst, self._deg = _apply_batch_sorted_jit(
+                self._src, self._dst, self._deg,
+                jnp.asarray(p1), jnp.asarray(p2), jnp.asarray(su),
+                jnp.asarray(sv), jnp.asarray(du), jnp.asarray(dv),
+                jnp.asarray(w), self.node_capacity,
+            )
+            return
         if self.mesh is not None:
             apply_fn = _make_sharded_apply(self.mesh, self.node_capacity)
             self._src, self._dst, self._deg = apply_fn(
@@ -621,7 +688,7 @@ class DeltaEngine:
             rho_lb, k, _, n_cand, ne_cand = _plan_jit(
                 self._src, self._dst, self._prev_mask,
                 jnp.asarray(self.buffer.n_edges, jnp.int32),
-                self.node_capacity,
+                self.node_capacity, self.kernel,
             )
         new = build_plan(
             float(rho_lb), int(k), int(n_cand), int(ne_cand),
@@ -649,6 +716,7 @@ class DeltaEngine:
         res = pruned_peel_host(
             u, v, np.asarray(self._deg),
             self.buffer.n_edges, self.eps, self._plan, mesh=self.mesh,
+            kernel=self.kernel,
         )
         if res is None:
             # survivor set fits no legal bucket this epoch: stop paying the
@@ -700,7 +768,8 @@ class DeltaEngine:
             return final
         return _pbahmani_jit(
             self._src, self._dst, self.node_capacity,
-            jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps)
+            jnp.asarray(self.buffer.n_edges, jnp.int32), self.eps,
+            self.kernel)
 
     def refresh(self) -> QueryResult:
         """Epoch refresh: compact the buffer (shrinking capacity when the
@@ -736,6 +805,7 @@ class DeltaEngine:
             sp.set("passes", passes).set("density", density)
             sp.set("path", "pruned" if pruned_flag else "warm")
             sp.set("compiled", compiled)
+            sp.set("kernel", self.kernel)
             if pruned_flag:
                 sp.set("candidate_fraction", self.metrics.candidate_fraction)
             ms = sp.elapsed_ms
@@ -802,6 +872,7 @@ class DeltaEngine:
                         self._src, self._dst, self._deg,
                         jnp.asarray(self.buffer.n_edges, jnp.int32),
                         self._prev_mask, self.node_capacity, self.eps,
+                        self.kernel,
                     )
                 density = float(final.best_density)
                 warm_rho = float(warm_rho)
@@ -822,6 +893,7 @@ class DeltaEngine:
             sp.set("passes", passes).set("density", density)
             sp.set("path", "pruned" if pruned_flag else "warm")
             sp.set("compiled", compiled)
+            sp.set("kernel", self.kernel)
             ms = sp.elapsed_ms
         self._note_query_ms(ms, compiled)
         self._cached_query = QueryResult(
@@ -909,7 +981,7 @@ class DeltaEngine:
             cert, mask_full, passes, rounds, _ = refine_resident(
                 src, dst, deg, self.buffer.n_edges, self.node_capacity,
                 self.eps, seed_ne, seed_nv, seed_mask, q.passes, tg,
-                max_rounds)
+                max_rounds, self.kernel)
             self._refine_cert = cert
             self._cert_mask = mask_full.copy()
             self._cert_insert_slack = 0
@@ -918,6 +990,7 @@ class DeltaEngine:
             sp.set("refine_rounds", rounds)
             sp.set("certified_gap", cert.rel_gap)
             sp.set("path", "refined").set("compiled", compiled)
+            sp.set("kernel", self.kernel)
             ms = sp.elapsed_ms
         self.metrics.n_refine_queries += 1
         self.metrics.refine_rounds_total += rounds

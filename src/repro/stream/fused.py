@@ -226,13 +226,22 @@ FUSED_JITS = [_lane_write_jit, _mask_rows_write_jit, _lane_gather_jit,
 # the per-bucket lane stack
 # ---------------------------------------------------------------------------
 class TenantBatch:
-    """Stacked device state for every tenant in one capacity bucket."""
+    """Stacked device state for every tenant in one capacity bucket.
+
+    ``kernel`` routes the batched warm/bucket/refine peels through the
+    Pallas segment-sum tier. Fused lanes keep the *unsorted* resident
+    layout (per-lane sorted views are a ROADMAP follow-up): the kernel
+    recomputes its bands from the data each call, so results stay
+    bit-identical — only the band-skip win is smaller than the unbatched
+    engine's sorted path. The flag is part of the pool's bucket key, since
+    it is a static argument of every batched program."""
 
     def __init__(self, node_capacity: int, edge_capacity: int, eps: float,
-                 lanes: int = MIN_LANES):
+                 lanes: int = MIN_LANES, kernel: bool = False):
         self.node_capacity = int(node_capacity)
         self.edge_capacity = int(edge_capacity)
         self.eps = float(eps)
+        self.kernel = bool(kernel)
         self.lanes = max(next_pow2(lanes), MIN_LANES)
         # small vertex spaces additionally keep the dense adjacency stack
         # and peel through batched GEMVs (see DENSE_NODE_CAP)
@@ -384,7 +393,7 @@ class TenantBatch:
                 adj_g, deg_g, jnp.asarray(ne), mask_g, self.eps)
         return _batched_warm_peel_jit(
             src_g, dst_g, deg_g, jnp.asarray(ne), mask_g,
-            self.node_capacity, self.eps)
+            self.node_capacity, self.eps, self.kernel)
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"TenantBatch(|V|={self.node_capacity}, "
@@ -398,14 +407,16 @@ class FusedPool:
     therefore the same fused programs."""
 
     def __init__(self):
-        self.batches: dict[tuple[int, int, float], TenantBatch] = {}
+        self.batches: dict[tuple[int, int, float, bool], TenantBatch] = {}
 
     def batch_for(self, node_capacity: int, edge_capacity: int,
-                  eps: float) -> TenantBatch:
-        key = (int(node_capacity), int(edge_capacity), float(eps))
+                  eps: float, kernel: bool = False) -> TenantBatch:
+        key = (int(node_capacity), int(edge_capacity), float(eps),
+               bool(kernel))
         batch = self.batches.get(key)
         if batch is None:
-            batch = self.batches[key] = TenantBatch(*key)
+            batch = self.batches[key] = TenantBatch(
+                key[0], key[1], key[2], kernel=key[3])
         return batch
 
     def place(self, eng: "FusedEngine") -> None:
@@ -413,7 +424,7 @@ class FusedPool:
         buffer capacity — a capacity change (grow/shrink) migrates the
         tenant between buckets (evict + join: two row swaps)."""
         batch = self.batch_for(eng.node_capacity, eng.buffer.capacity,
-                               eng.eps)
+                               eng.eps, eng.kernel)
         if eng.batch is batch:
             return
         if eng.batch is not None:
@@ -436,9 +447,11 @@ class FusedEngine(DeltaEngine):
 
     def __init__(self, name: str, pool: FusedPool, n_nodes: int,
                  eps: float = 0.0, capacity: int = MIN_CAPACITY,
-                 refresh_every: int = 32, pruned: bool = True):
+                 refresh_every: int = 32, pruned: bool = True,
+                 kernel: bool | None = None):
         super().__init__(n_nodes, eps=eps, capacity=capacity,
-                         refresh_every=refresh_every, pruned=pruned)
+                         refresh_every=refresh_every, pruned=pruned,
+                         kernel=kernel)
         self.name = str(name)
         self.pool = pool
         self.batch: TenantBatch | None = None
@@ -690,7 +703,7 @@ def _flush_body(batch: TenantBatch, members, refine: bool,
             jnp.asarray(b_src), jnp.asarray(b_dst), jnp.asarray(n_v),
             jnp.asarray(n_e), jnp.asarray(best),
             jnp.ones(gp, jnp.int32),  # host simulated pass 0 for every lane
-            batch.eps, *buckets)
+            batch.eps, *buckets, batch.kernel)
         d_b, mask_b = np.asarray(d_b), np.asarray(mask_b)
         passes_b = np.asarray(passes_b)
         for i, (name, eng, pd) in enumerate(items):
@@ -739,6 +752,7 @@ def _flush_body(batch: TenantBatch, members, refine: bool,
         (bk, next_pow2(len(items))) for bk, items in by_buckets.items()))
     audit_shape = (
         batch.node_capacity, batch.edge_capacity, batch.eps, batch.lanes,
+        batch.kernel,
         next_pow2(len(pruned_lanes)) if pruned_lanes else 0,
         next_pow2(len(warm)) if warm else 0,
         bucket_sig,
@@ -815,7 +829,7 @@ def _refine_flush(batch: TenantBatch, members, peel_out,
         else:
             loads, bd, be, bv, bm, ps = _batched_refine_round_jit(
                 src_g, dst_g, deg_g, ne_j, loads, bd, be, bv, bm, ps,
-                nc, batch.eps)
+                nc, batch.eps, batch.kernel)
         rounds = t
         loads_np = np.asarray(loads)
         be_np, bv_np = np.asarray(be), np.asarray(bv)
@@ -950,7 +964,7 @@ def ingest_group(updates: dict[str, tuple], engines: dict[str, DeltaEngine]):
                 compiled = AUDITOR.record(
                     label, "fused_ingest",
                     (batch.node_capacity, batch.edge_capacity, batch.eps,
-                     batch.lanes, b))
+                     batch.lanes, batch.kernel, b))
                 sp.set("n_lanes", len(rows)).set("compiled", compiled)
     return stats
 

@@ -79,6 +79,10 @@ class TenantStats:
     n_query_first_calls: int = 0
     query_first_call_ms: float = 0.0
     query_steady_ms: float = 0.0
+    # kernel-tier dispatch (core/dispatch.py): whether this tenant's degree
+    # reductions run through the Pallas segment-sum tier (bit-identical to
+    # the scatter tier; the deploy default follows PALLAS_INTERPRET)
+    kernel: bool = False
 
 
 class GraphRegistry:
@@ -86,7 +90,8 @@ class GraphRegistry:
 
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
                  refresh_every: int = 32, pruned: bool = True,
-                 sharded: bool = False, mesh=None, fused: bool = False):
+                 sharded: bool = False, mesh=None, fused: bool = False,
+                 kernel: bool | None = None):
         if max_tenants <= 0:
             raise ValueError("max_tenants must be >= 1")
         self.max_tenants = int(max_tenants)
@@ -103,6 +108,10 @@ class GraphRegistry:
         # roster (join/evict = row swap) rather than a compile event
         self.default_fused = bool(fused)
         self.fused_pool = FusedPool()
+        # kernel-tier default: None defers to the deploy default
+        # (core/dispatch.kernel_default — on when PALLAS_INTERPRET=0);
+        # per-tenant ``register(kernel=...)`` overrides it
+        self.default_kernel = kernel
         self._engines: OrderedDict[str, DeltaEngine] = OrderedDict()
         self.evictions = 0
 
@@ -117,6 +126,7 @@ class GraphRegistry:
         pruned: bool | None = None,
         sharded: bool | None = None,
         fused: bool | None = None,
+        kernel: bool | None = None,
     ) -> DeltaEngine:
         """Create (or return the existing) engine for ``name``.
 
@@ -138,6 +148,14 @@ class GraphRegistry:
         want_sharded = (self.default_sharded if sharded is None
                         else bool(sharded))
         want_fused = self.default_fused if fused is None else bool(fused)
+        # resolve exactly like DeltaEngine.__init__ will, so the re-register
+        # conflict check below compares like with like (sharded engines stay
+        # on the scatter tier — ROADMAP follow-up)
+        from repro.core.dispatch import resolve_kernel
+
+        want_kernel = resolve_kernel(
+            self.default_kernel if kernel is None else kernel
+        ) and not want_sharded
         if want_fused and want_sharded:
             raise ValueError(
                 "fused multi-tenant execution does not support sharded "
@@ -147,13 +165,16 @@ class GraphRegistry:
             is_fused = isinstance(eng, FusedEngine)
             if (eng.n_nodes != int(n_nodes) or eng.eps != want_eps
                     or eng.sharded != want_sharded
-                    or is_fused != want_fused):
+                    or is_fused != want_fused
+                    or eng.kernel != want_kernel):
                 raise ValueError(
                     f"tenant {name!r} already registered with "
                     f"n_nodes={eng.n_nodes}, eps={eng.eps}, "
-                    f"sharded={eng.sharded}, fused={is_fused}; got "
+                    f"sharded={eng.sharded}, fused={is_fused}, "
+                    f"kernel={eng.kernel}; got "
                     f"n_nodes={n_nodes}, eps={want_eps}, "
-                    f"sharded={want_sharded}, fused={want_fused}"
+                    f"sharded={want_sharded}, fused={want_fused}, "
+                    f"kernel={want_kernel}"
                 )
             return eng
         kwargs = dict(
@@ -165,6 +186,7 @@ class GraphRegistry:
                 else int(refresh_every)
             ),
             pruned=self.default_pruned if pruned is None else bool(pruned),
+            kernel=want_kernel,
         )
         if want_fused:
             eng = FusedEngine(name, self.fused_pool, **kwargs)
@@ -246,6 +268,7 @@ class GraphRegistry:
             n_query_first_calls=m.n_query_first_calls,
             query_first_call_ms=m.query_first_call_ms_total,
             query_steady_ms=m.query_steady_ms_total,
+            kernel=eng.kernel,
         )
 
     def all_stats(self) -> list[TenantStats]:

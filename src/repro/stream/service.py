@@ -66,10 +66,12 @@ class StreamService:
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
                  refresh_every: int = 32, pruned: bool = True,
                  sharded: bool = False, mesh=None, fused: bool = False,
+                 kernel: bool | None = None,
                  coalesce_window_ms: float = 0.0):
         self.registry = GraphRegistry(
             max_tenants=max_tenants, eps=eps, refresh_every=refresh_every,
             pruned=pruned, sharded=sharded, mesh=mesh, fused=fused,
+            kernel=kernel,
         )
         self.metrics = ServiceMetrics()
         # query coalescing: pending (ticket, tenant, t_submit) triples are
@@ -111,18 +113,22 @@ class StreamService:
     def create_tenant(self, tenant: str, n_nodes: int, eps: float | None = None,
                       capacity: int = MIN_CAPACITY,
                       pruned: bool | None = None,
-                      sharded: bool | None = None) -> ServiceResponse:
+                      sharded: bool | None = None,
+                      kernel: bool | None = None) -> ServiceResponse:
         """``pruned=False`` opts a tenant back into the PR-1 warm-mask path,
         whose warm_density is an anytime lower bound that can exceed the
         exact density right after deletions (pruned tenants mirror the
         exact result instead). ``sharded=True`` opts the tenant into the
         shard_map engine — its graph spans the service's mesh at identical
-        query results, lifting the one-chip memory cap."""
+        query results, lifting the one-chip memory cap. ``kernel`` routes
+        the tenant's degree reductions through the Pallas segment-sum tier
+        (bit-identical results; None defers to the service default, which
+        itself defers to PALLAS_INTERPRET)."""
         with span("service", op="create_tenant", tenant=tenant) as sp:
             try:
                 eng = self.registry.register(tenant, n_nodes, eps=eps,
                                              capacity=capacity, pruned=pruned,
-                                             sharded=sharded)
+                                             sharded=sharded, kernel=kernel)
             except (ValueError, KeyError) as e:
                 return self._respond("create_tenant", tenant, sp,
                                      error=str(e))

@@ -110,6 +110,74 @@ def test_peel_update_matches_pass_semantics(er_graph):
     np.testing.assert_array_equal(delta.astype(np.int64), expected)
 
 
+def test_peel_update_returns_int32(er_graph):
+    """The peel recurrence is int32; the f32 MXU accumulator must cast at
+    the op boundary (ISSUE 7 satellite — the silent upcast broke kernel-path
+    bit-identity with the scatter tier)."""
+    g = er_graph
+    src_s, dst_s = g.dst_sorted()
+    failed = jnp.zeros(g.n_nodes, bool).at[::3].set(True)
+    out = ops.peel_update(jnp.asarray(src_s), jnp.asarray(dst_s), failed,
+                          n_nodes=g.n_nodes)
+    assert out.dtype == jnp.int32
+    xla = ops.peel_update(jnp.asarray(src_s), jnp.asarray(dst_s), failed,
+                          n_nodes=g.n_nodes, impl="xla")
+    assert xla.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(xla))
+
+
+def test_segment_sum_all_sentinel():
+    """Every id out of range (a fully-padded bucket tail): exact zeros."""
+    seg = jnp.full((700,), 1 << 20, jnp.int32)
+    vals = jnp.ones((700,), jnp.float32)
+    out = ops.segment_sum(vals, seg, num_segments=32)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(32, np.float32))
+
+
+def test_segment_sum_one_segment_straddles_tiles():
+    """A single hot segment wider than E_TILE (duplicate ids crossing every
+    tile boundary) must accumulate across the whole sequential grid."""
+    e = 1537  # 3 full 512-lane tiles + 1
+    seg = jnp.zeros((e,), jnp.int32)
+    vals = jnp.ones((e,), jnp.float32)
+    out = ops.segment_sum(vals, seg, num_segments=4)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.array([e, 0, 0, 0], np.float32))
+
+
+def test_segment_sum_duplicates_at_tile_boundary():
+    """Segments deliberately split across the 512-lane tile edge."""
+    seg_np = np.sort(np.r_[np.full(510, 3), np.full(5, 4), np.full(509, 5)])
+    seg = jnp.asarray(seg_np.astype(np.int32))
+    vals = jnp.ones((seg_np.size,), jnp.float32)
+    out = np.asarray(ops.segment_sum(vals, seg, num_segments=8))
+    np.testing.assert_array_equal(
+        out, np.bincount(seg_np, minlength=8).astype(np.float32))
+
+
+def test_unsorted_fallback_emits_obs_counter():
+    """presorted=False argsorts inside the compiled program; the obs counter
+    is how a deployment notices a hot path quietly re-sorting (ISSUE 7)."""
+    from repro.obs.trace import Tracer, set_tracer
+
+    tr = Tracer(profiler_bridge=False)
+    prev = set_tracer(tr)
+    try:
+        rng = np.random.default_rng(11)
+        vals, seg = _random_problem(rng, 300, 4, 50, sorted_=False)
+        ops.segment_sum(vals, seg, num_segments=50, presorted=False)
+        ops.segment_sum(vals, seg, num_segments=50, presorted=False)
+        assert tr.registry.counter(
+            "kernel_unsorted_fallback_total", op="segment_sum").value == 2
+        # the sorted path must NOT touch the counter
+        vals_s, seg_s = _random_problem(rng, 300, 4, 50, sorted_=True)
+        ops.segment_sum(vals_s, seg_s, num_segments=50)
+        assert tr.registry.counter(
+            "kernel_unsorted_fallback_total", op="segment_sum").value == 2
+    finally:
+        set_tracer(prev)
+
+
 @pytest.mark.parametrize("n,d,e,v,weighted", [
     (50, 16, 1000, 300, True),
     (20, 64, 200, 64, False),
@@ -125,3 +193,83 @@ def test_segment_embed(n, d, e, v, weighted):
     exp = ref.segment_embed_ref(table, gid, seg, w, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefix sum + stream compaction (ISSUE 7: device-resident bucket compaction)
+# ---------------------------------------------------------------------------
+from repro.kernels.compact import P_TILE, prefix_sum, stream_compact
+
+
+def _compact_oracle(values: np.ndarray, live: np.ndarray, out_size: int,
+                    fill: int) -> np.ndarray:
+    """The scatter it replaces: full(fill).at[cumsum-1].set(mode="drop")."""
+    out = np.full((out_size,) + values.shape[1:], fill, np.int32)
+    pos = np.cumsum(live.astype(np.int64)) - 1
+    for i in range(values.shape[0]):
+        if live[i] and 0 <= pos[i] < out_size:
+            out[pos[i]] = values[i]
+    return out
+
+
+@pytest.mark.parametrize("e", [1, 7, P_TILE - 1, P_TILE, P_TILE + 1, 1500])
+def test_prefix_sum_matches_numpy(e):
+    rng = np.random.default_rng(e)
+    x = rng.integers(0, 4, e).astype(np.int32)
+    out = prefix_sum(jnp.asarray(x))
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.cumsum(x))
+
+
+def test_prefix_sum_bool_and_extremes():
+    ones = jnp.ones((3 * P_TILE + 5,), bool)
+    np.testing.assert_array_equal(
+        np.asarray(prefix_sum(ones)), np.arange(1, 3 * P_TILE + 6))
+    zeros = jnp.zeros((P_TILE + 1,), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(prefix_sum(zeros)), np.zeros(P_TILE + 1, np.int32))
+
+
+@pytest.mark.parametrize("e,out_size,p_live", [
+    (100, 128, 0.5),
+    (1500, 1024, 0.7),
+    (513, 512, 0.3),
+    (64, 16, 0.9),     # overflow: survivors > out_size must drop, not wrap
+])
+def test_stream_compact_matches_scatter(e, out_size, p_live):
+    rng = np.random.default_rng(e + out_size)
+    values = rng.integers(0, 10_000, e).astype(np.int32)
+    live = rng.random(e) < p_live
+    out = stream_compact(jnp.asarray(values), jnp.asarray(live),
+                         out_size=out_size, fill=out_size)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(out), _compact_oracle(values, live, out_size, out_size))
+
+
+def test_stream_compact_2d_and_order():
+    """2-D payloads (remapped src/dst pairs) compact row-wise, and the
+    survivor order is the lane order — the sortedness invariant the pruned
+    kernel path relies on (a dst-sorted parent stays dst-sorted)."""
+    rng = np.random.default_rng(3)
+    e, out_size = 400, 256
+    dst = np.sort(rng.integers(0, 40, e)).astype(np.int32)
+    src = rng.integers(0, 40, e).astype(np.int32)
+    live = rng.random(e) < 0.6
+    packed = np.asarray(stream_compact(
+        jnp.asarray(np.stack([src, dst], axis=1)), jnp.asarray(live),
+        out_size=out_size, fill=out_size))
+    k = int(live.sum())
+    np.testing.assert_array_equal(packed[:k, 0], src[live])
+    np.testing.assert_array_equal(packed[:k, 1], dst[live])
+    assert (np.diff(packed[:k, 1]) >= 0).all()  # still dst-sorted
+    assert (packed[k:] == out_size).all()       # sentinel tail
+
+
+def test_stream_compact_all_dead_all_live():
+    vals = jnp.arange(300, dtype=jnp.int32)
+    dead = stream_compact(vals, jnp.zeros(300, bool), out_size=64, fill=-7)
+    np.testing.assert_array_equal(np.asarray(dead), np.full(64, -7))
+    alive = stream_compact(vals, jnp.ones(300, bool), out_size=512, fill=512)
+    np.testing.assert_array_equal(
+        np.asarray(alive), np.r_[np.arange(300), np.full(212, 512)])

@@ -158,3 +158,84 @@ def test_exact_matches_brute_force_small(seed):
     # and the returned mask actually achieves the optimum
     if g.n_edges:
         assert g.subgraph_density(mask) == pytest.approx(rho_brute, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# (f) kernel-tier parity: the Pallas segment-sum path is BIT-identical to
+#     the scatter path for every algorithm that dispatches through
+#     core/dispatch.py (ISSUE 7 — density, mask, and pass count all match,
+#     not just approximately: both tiers sum the same 0/1 contributions
+#     inside the f32 exactness envelope)
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.1]))
+def test_kernel_tier_bit_identical(seed, eps):
+    g = _random_graph(seed)
+    if g.n_edges == 0:
+        return
+    for peel in (pbahmani, pbahmani_pruned):
+        d0, m0, p0 = peel(g, eps=eps, kernel=False)
+        d1, m1, p1 = peel(g, eps=eps, kernel=True)
+        assert (d0, p0) == (d1, p1)
+        np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    core0 = kcore_decompose(g, kernel=False)
+    core1 = kcore_decompose(g, kernel=True)
+    np.testing.assert_array_equal(core0[0], core1[0])
+    assert core0[1:] == core1[1:]
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.1]))
+def test_kernel_tier_refine_certificates_identical(seed, eps):
+    """Fixed-budget refinement (negative target = run exactly max_rounds)
+    must produce the same certificate either way — loads, duals, and the
+    best mask are all integer-exact reductions."""
+    g = _random_graph(seed)
+    if g.n_edges == 0:
+        return
+    r0 = refine(g, target_gap=-1.0, max_rounds=6, eps=eps, kernel=False)
+    r1 = refine(g, target_gap=-1.0, max_rounds=6, eps=eps, kernel=True)
+    assert r0.density == r1.density
+    assert r0.dual_bound == r1.dual_bound
+    assert (r0.rounds, r0.passes) == (r1.rounds, r1.passes)
+    np.testing.assert_array_equal(r0.mask, r1.mask)
+    assert [(h.density, h.dual_bound) for h in r0.history] == \
+        [(h.density, h.dual_bound) for h in r1.history]
+
+
+def test_kernel_tier_streaming_parity_and_zero_steady_recompiles():
+    """DeltaEngine with kernel=True serves bit-identical answers through
+    churn, and the steady state compiles nothing extra: after warmup, a
+    second pass of same-shape updates+queries leaves the executable
+    counter flat (the zero-steady-state-recompile contract, kernel tier
+    included)."""
+    from repro.stream.delta import DeltaEngine
+
+    def drive(kernel):
+        rng = np.random.default_rng(17)
+        eng = DeltaEngine(250, eps=0.1, refresh_every=4, kernel=kernel)
+        out = []
+        for _ in range(10):
+            batch = rng.integers(0, 250, size=(24, 2), dtype=np.int64)
+            eng.apply_updates(insert=batch)
+            q = eng.query()
+            out.append((float(q.density), int(np.asarray(q.mask).sum()),
+                        int(q.passes)))
+        return eng, out
+
+    eng_off, out_off = drive(False)
+    eng_on, out_on = drive(True)
+    assert eng_on.kernel and not eng_off.kernel
+    assert out_off == out_on
+    # steady state: pre-sized buffer (no growth = no legitimate new shapes),
+    # same-shape churn on a warm kernel engine leaves the counter flat
+    rng = np.random.default_rng(99)
+    eng = DeltaEngine(500, eps=0.1, capacity=4096, refresh_every=10**9,
+                      kernel=True)
+    eng.apply_updates(insert=rng.integers(0, 500, size=(48, 2)))
+    eng.query()
+    n0 = DeltaEngine.compile_count()
+    for _ in range(8):
+        eng.apply_updates(insert=rng.integers(0, 500, size=(48, 2)))
+        eng.query()
+    assert DeltaEngine.compile_count() == n0, "kernel hot path recompiled"
