@@ -7,9 +7,10 @@ COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
 	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py \
 	tests/test_tenants.py tests/test_refine.py tests/test_obs.py \
-	tests/test_kernels.py
+	tests/test_kernels.py tests/test_analysis.py
 
-.PHONY: test coverage lint bench-smoke bench-prune-smoke bench-shard-smoke \
+.PHONY: test coverage lint lint-invariants bench-smoke bench-prune-smoke \
+	bench-shard-smoke \
 	bench-tenants-smoke bench-refine-smoke bench-density-smoke \
 	bench-epsilon-smoke bench-kernels-smoke bench-check bench-baseline \
 	bench metrics-demo deps-dev
@@ -22,12 +23,18 @@ test:
 coverage:
 	$(PY) -m pytest -q $(COV_TESTS) \
 		--cov=repro.core --cov=repro.stream --cov=repro.refine \
-		--cov=repro.obs \
+		--cov=repro.obs --cov=repro.analysis \
 		--cov-report=term-missing --cov-fail-under=75
 
 # ruff gate (needs ruff: `make deps-dev`); config in pyproject.toml
 lint:
 	$(PY) -m ruff check src benchmarks tests examples
+
+# invariant linter (repro.analysis): trace-safety, auditor coverage,
+# exactness-proof, and collective-parity rules over the package tree.
+# Exit 1 on any unsuppressed finding — the same gate CI runs.
+lint-invariants:
+	$(PY) -m repro.analysis --show-suppressed src/repro
 
 # fast end-to-end sanity: the streaming benchmark at toy scale
 # (writes BENCH_stream.json — the benchmark-trajectory artifact)

@@ -1,0 +1,32 @@
+"""repro.analysis — the invariant linter (ISSUE 8 tentpole).
+
+An AST-based static-analysis pass that proves, at CI time, the three
+invariants every subsystem in this repo is built on (ROADMAP "Invariant
+discipline"): trace-safety / zero steady-state recompiles (RPR1xx),
+recompile-auditor coverage of every jit entry point (RPR2xx), exact
+int32/rational arithmetic for anything called a proof (RPR3xx), and
+collective-parity discipline inside shard_map bodies (RPR4xx). The test
+suite checks these invariants dynamically on the shapes it happens to
+execute; the linter makes them a compile-time property of the whole tree.
+
+Entry points: the ``repro-lint`` console script / ``python -m
+repro.analysis`` (cli.py), ``make lint-invariants``, and the
+:func:`run_analysis` API the tests drive directly. Checkers are small
+:class:`~repro.analysis.framework.Rule` subclasses over a shared module
+walker — a new rule is a ~50-line addition (see ROADMAP "Static analysis"
+for the follow-up inventory).
+"""
+from repro.analysis.framework import (
+    Analyzer, Finding, ModuleInfo, Rule, load_module, run_analysis,
+)
+from repro.analysis.pragmas import PragmaIndex, Suppression, parse_pragmas
+from repro.analysis.report import to_human, to_json
+from repro.analysis.rules import ALL_RULES, RULE_CATALOG, rules_by_id
+
+__all__ = [
+    "Analyzer", "Finding", "ModuleInfo", "Rule",
+    "load_module", "run_analysis",
+    "PragmaIndex", "Suppression", "parse_pragmas",
+    "to_human", "to_json",
+    "ALL_RULES", "RULE_CATALOG", "rules_by_id",
+]

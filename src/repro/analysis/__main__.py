@@ -1,0 +1,9 @@
+"""``python -m repro.analysis`` — same entry point as ``repro-lint``."""
+import sys
+
+from repro.analysis.cli import main
+
+try:
+    sys.exit(main())
+except BrokenPipeError:  # e.g. `repro-lint ... | head`
+    sys.exit(0)

@@ -1,0 +1,91 @@
+"""``repro-lint`` — the invariant linter's command line.
+
+Exit codes: 0 clean, 1 findings, 2 bad usage / internal error.
+
+Typical invocations::
+
+    repro-lint                       # lint src/repro with the full catalog
+    repro-lint --json src/repro      # machine-readable report (CI artifact)
+    repro-lint --rules RPR301,RPR302 path/to/file.py
+    repro-lint --static              # skip the runtime providers_snapshot()
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.framework import Analyzer
+from repro.analysis.report import to_human, to_json
+from repro.analysis.rules import ALL_RULES, RULE_CATALOG
+from repro.analysis.rules.audit import AuditCoverageRule
+
+DEFAULT_PATHS = ["src/repro"]
+
+
+def build_rules(ids: set[str] | None, dynamic: bool):
+    rules = []
+    for cls in ALL_RULES:
+        if ids and cls.rule_id not in ids:
+            continue
+        if cls is AuditCoverageRule:
+            rules.append(cls(dynamic=dynamic))
+        else:
+            rules.append(cls())
+    return rules
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="Static invariant linter: trace-safety (RPR1xx), "
+                    "auditor coverage (RPR2xx), exactness (RPR3xx), "
+                    "collective parity (RPR4xx).")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files or directories (default: src/repro)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the JSON report instead of human output")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule IDs to run (default: all)")
+    parser.add_argument("--static", action="store_true",
+                        help="pure-static mode: do not import the runtime "
+                             "tree for the RPR201 providers snapshot")
+    parser.add_argument("--show-suppressed", action="store_true",
+                        help="list fired suppressions with their reasons")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULE_CATALOG):
+            print(f"{rid}  {RULE_CATALOG[rid]}")
+        return 0
+
+    ids: set[str] | None = None
+    if args.rules:
+        ids = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = ids - set(RULE_CATALOG)
+        if unknown:
+            print(f"repro-lint: unknown rule id(s): {sorted(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    paths = [Path(p) for p in (args.paths or DEFAULT_PATHS)]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"repro-lint: no such path(s): "
+              f"{[str(p) for p in missing]}", file=sys.stderr)
+        return 2
+
+    analyzer = Analyzer(build_rules(ids, dynamic=not args.static),
+                        root=Path.cwd())
+    result = analyzer.run(paths)
+    if args.json:
+        print(to_json(result))
+    else:
+        print(to_human(result, show_suppressed=args.show_suppressed))
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Rule catalog for the invariant linter.
+
+Four families, one module each — a new rule is a subclass + a catalog
+entry (~50 lines; see ROADMAP "Static analysis" for planned additions):
+
+==========  ================================================================
+RPR001      malformed ``# repro:`` pragma (framework-emitted)
+RPR101      host sync inside a jit context (float()/int()/.item()/np.asarray)
+RPR102      Python if/while on a traced value inside a jit context
+RPR103      traced value interpolated into an f-string / str() / dict key
+RPR104      jax.jit constructed per call (inside an uncached function)
+RPR201      jit entry point unreachable from any registered auditor provider
+RPR301      float literal inside a ``# repro: proof`` scope
+RPR302      true division inside a proof scope
+RPR303      float dtype / float() cast inside a proof scope
+RPR304      f32-accumulating kernel call without assert_exact_envelope
+RPR401      per-shard reduction escapes a shard_map body without psum/pmax
+RPR402      collective axis name not in the enclosing in_specs mesh axes
+==========  ================================================================
+"""
+from repro.analysis.rules.audit import AuditCoverageRule
+from repro.analysis.rules.collective import (
+    CollectiveAxisRule, UnreducedEscapeRule,
+)
+from repro.analysis.rules.exact import (
+    EnvelopeRule, FloatDtypeRule, FloatLiteralRule, TrueDivisionRule,
+)
+from repro.analysis.rules.trace import (
+    HostSyncRule, PerCallJitRule, TracedControlFlowRule, TracedKeyRule,
+)
+
+ALL_RULES = [
+    HostSyncRule, TracedControlFlowRule, TracedKeyRule, PerCallJitRule,
+    AuditCoverageRule,
+    FloatLiteralRule, TrueDivisionRule, FloatDtypeRule, EnvelopeRule,
+    UnreducedEscapeRule, CollectiveAxisRule,
+]
+
+RULE_CATALOG = {cls.rule_id: cls.title for cls in ALL_RULES}
+RULE_CATALOG["RPR001"] = "malformed # repro: pragma"
+
+
+def rules_by_id(ids=None):
+    """Instantiate the catalog, optionally filtered to the given rule IDs."""
+    classes = ALL_RULES if not ids else [
+        cls for cls in ALL_RULES if cls.rule_id in set(ids)]
+    return [cls() for cls in classes]
+
+
+__all__ = ["ALL_RULES", "RULE_CATALOG", "rules_by_id"]

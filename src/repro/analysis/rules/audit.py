@@ -1,0 +1,121 @@
+"""RPR2xx — auditor-coverage rules.
+
+``DeltaEngine.compile_count()`` / the recompile auditor can only see jit
+caches that some registered provider yields — a new subsystem that mints
+its own jit entry points silently under-counts until someone notices a
+missing attribution. RPR201 closes that hole statically: every jit entry
+point the walker discovers must be reachable from a registered provider
+(the runtime's own ``AUDITOR.providers_snapshot()`` is the source of
+truth — satellite of ISSUE 8 — so the checker and the auditor can never
+drift), appended to a ``*_JITS`` registry list that a provider re-reads,
+or explicitly marked ``# repro: unaudited -- <reason>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.framework import (
+    Finding, ModuleInfo, Rule, dotted, find_jit_contexts,
+)
+
+
+def _registry_appends(mod: ModuleInfo) -> set[str]:
+    """Names appended to any ``*_JITS`` registry list in this module
+    (``SHARDED_JITS.append(run)`` and friends)."""
+    out: set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "append" \
+                and dotted(node.func.value).endswith("_JITS"):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    out.add(arg.id)
+    return out
+
+
+def _registry_members(mod: ModuleInfo) -> set[str]:
+    """Names listed in a module-level ``*_JITS = [...]`` literal."""
+    out: set[str] = set()
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) and node.targets \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id.endswith("_JITS") \
+                and isinstance(node.value, (ast.List, ast.Tuple)):
+            for e in node.value.elts:
+                if isinstance(e, ast.Name):
+                    out.add(e.id)
+    return out
+
+
+def load_provider_entry_points() -> set[str] | None:
+    """Qualified ``module.name`` of every jit entry point the runtime
+    auditor's registered providers yield at import time. Returns None when
+    the runtime tree cannot be imported (pure-static mode) — module-level
+    coverage is then skipped rather than mis-reported."""
+    try:
+        import repro.stream.delta  # noqa: F401  (registers the providers)
+        from repro.obs.audit import AUDITOR
+
+        snapshot = AUDITOR.providers_snapshot()
+    except Exception:
+        return None
+    return {entry for entries in snapshot.values() for entry in entries}
+
+
+class AuditCoverageRule(Rule):
+    rule_id = "RPR201"
+    title = "jit entry point not reachable from a registered auditor provider"
+    project_level = True
+
+    def __init__(self, dynamic: bool = True):
+        self._dynamic = dynamic
+        self._provider_entries: set[str] | None = None
+        self._loaded = False
+
+    def _entries(self) -> set[str] | None:
+        if not self._loaded:
+            self._provider_entries = (
+                load_provider_entry_points() if self._dynamic else None)
+            self._loaded = True
+        return self._provider_entries
+
+    def check_project(self, mods: list[ModuleInfo]) -> Iterator[Finding]:
+        entries = self._entries()
+        for mod in mods:
+            rel = mod.rel()
+            appends = _registry_appends(mod) | _registry_members(mod)
+            for ctx in find_jit_contexts(mod):
+                if ctx.kind == "shard_map_body":
+                    continue  # traced inside an already-counted jit
+                if mod.pragmas.unaudited_reason(ctx.def_lines()) is not None:
+                    continue
+                if ctx.name in appends:
+                    continue  # re-read by a provider via its registry list
+                if ctx.module_level:
+                    if entries is None:
+                        continue  # pure-static mode: cannot prove either way
+                    if f"{mod.module}.{ctx.name}" in entries:
+                        continue
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=ctx.lineno,
+                        context=ctx.name,
+                        message=f"jit entry point '{ctx.name}' is not "
+                                "yielded by any registered auditor provider "
+                                "(obs.audit.AUDITOR.providers_snapshot()) — "
+                                "compile_count() under-counts it; add it to "
+                                "a provider's *_JITS list or mark it "
+                                "'# repro: unaudited -- <reason>'")
+                else:
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=ctx.lineno,
+                        context=ctx.name,
+                        message=f"factory-minted jit '{ctx.name}' (inside "
+                                f"'{'.'.join(ctx.enclosing)}') is never "
+                                "appended to a *_JITS registry list, so no "
+                                "auditor provider can re-read it; append it "
+                                "or mark it '# repro: unaudited -- <reason>'")
+
+
+__all__ = ["AuditCoverageRule", "load_provider_entry_points"]

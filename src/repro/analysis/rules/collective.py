@@ -1,0 +1,244 @@
+"""RPR4xx — collective-parity rules for shard_map bodies.
+
+The paper's shared-memory atomics become mesh collectives here: every
+per-shard partial (degree deltas, edge counts) must cross a
+``psum``/``pmax`` before it can stand in for the global value. A body
+that returns per-shard state through a *replicated* out_spec without a
+collective silently gives each device a different answer — the exact
+bug class the bit-identical-across-variants invariant exists to
+prevent. RPR401 tracks shard-taint statement by statement (a collective
+on the right-hand side *clears* the targets — post-psum values are
+replicated) and flags replicated outputs still carrying taint. RPR402
+checks that collective axis names actually exist in the enclosing
+in_specs/out_specs mesh axes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.framework import (
+    Finding, ModuleInfo, Rule, ShardMapCall, dotted, find_shard_map_calls,
+    iter_function_defs, names_in, param_names,
+)
+
+COLLECTIVES = {
+    "jax.lax.psum", "lax.psum", "psum",
+    "jax.lax.pmax", "lax.pmax", "pmax",
+    "jax.lax.pmin", "lax.pmin", "pmin",
+    "jax.lax.psum_scatter", "lax.psum_scatter", "psum_scatter",
+    "jax.lax.all_gather", "lax.all_gather", "all_gather",
+    "jax.lax.all_to_all", "lax.all_to_all", "all_to_all",
+}
+
+
+def collective_helpers(mod: ModuleInfo) -> set[str]:
+    """Names of module functions whose body reduces through a collective
+    (directly or via another such helper, to a fixpoint) — a call to one
+    returns mesh-replicated data, so it clears shard-taint just like an
+    inline psum (e.g. ``_local_delta`` in core/distributed.py)."""
+    fns = [(fn, {dotted(n.func) for n in ast.walk(fn)
+                 if isinstance(n, ast.Call)})
+           for fn, _enclosing in iter_function_defs(mod.tree)]
+    helpers: set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for fn, callees in fns:
+            if fn.name in helpers:
+                continue
+            if callees & COLLECTIVES or callees & helpers:
+                helpers.add(fn.name)
+                changed = True
+    return helpers
+
+
+def _has_collective(node: ast.AST, helpers: set[str] = frozenset()) -> bool:
+    return any(
+        isinstance(n, ast.Call)
+        and (dotted(n.func) in COLLECTIVES or dotted(n.func) in helpers)
+        for n in ast.walk(node))
+
+
+def _elts(node: ast.AST | None) -> list[ast.AST | None]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+class _TaintMachine:
+    """Statement-order shard-taint propagation inside one body.
+
+    An assignment whose right-hand side contains a collective call
+    REPLACES the targets' taint (the result is mesh-replicated); an
+    assignment from tainted names propagates; any other assignment
+    clears. Flow through ``for``/``if``/``while`` is handled by visiting
+    their bodies in order (conservatively keeping taint acquired in any
+    branch)."""
+
+    def __init__(self, seeds: set[str], helpers: set[str] = frozenset()):
+        self.taint = set(seeds)
+        self.helpers = set(helpers)
+        self.escapes: list[tuple[ast.Return, set[str]]] = []
+
+    def run(self, stmts: list[ast.stmt]) -> None:
+        for stmt in stmts:
+            self._stmt(stmt)
+
+    def _assign(self, targets: set[str], value: ast.AST | None) -> None:
+        if value is None:
+            return
+        if _has_collective(value, self.helpers):
+            self.taint -= targets
+        elif names_in(value) & self.taint:
+            self.taint |= targets
+        else:
+            self.taint -= targets
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            targets: set[str] = set()
+            for t in stmt.targets:
+                targets |= names_in(t)
+            self._assign(targets, stmt.value)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            # AugAssign reads its own target: x += tainted keeps x tainted
+            tgt = names_in(stmt.target)
+            if stmt.value is not None \
+                    and _has_collective(stmt.value, self.helpers) \
+                    and not isinstance(stmt, ast.AugAssign):
+                self.taint -= tgt
+            elif stmt.value is not None and (
+                    names_in(stmt.value) & self.taint
+                    or (isinstance(stmt, ast.AugAssign)
+                        and tgt & self.taint)):
+                self.taint |= tgt
+            elif not isinstance(stmt, ast.AugAssign):
+                self.taint -= tgt
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self.escapes.append((stmt, set(self.taint)))
+        elif isinstance(stmt, ast.For):
+            if names_in(stmt.iter) & self.taint:
+                self.taint |= names_in(stmt.target)
+            self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            self.run(stmt.body)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            pass  # nested defs (fori_loop bodies etc.) analyzed via calls
+
+
+def _body_analysis(sm: ShardMapCall, helpers: set[str]
+                   ) -> _TaintMachine | None:
+    body = sm.body
+    if not isinstance(body, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return None  # lambdas: single expression, handled by caller
+    params = param_names(body)
+    sharded = {params[i] for i in sm.sharded_param_indices()
+               if i < len(params)}
+    if not sharded:
+        return None
+    machine = _TaintMachine(sharded, helpers)
+    machine.run(body.body)
+    return machine
+
+
+class UnreducedEscapeRule(Rule):
+    rule_id = "RPR401"
+    title = "per-shard value escapes a shard_map body through a replicated out_spec"
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        rel = mod.rel()
+        helpers = collective_helpers(mod)
+        for sm in find_shard_map_calls(mod):
+            machine = _body_analysis(sm, helpers)
+            if machine is None:
+                continue
+            out_elts = _elts(sm.out_specs)
+            replicated = {
+                i for i, e in enumerate(out_elts)
+                if e is not None and not sm.spec_axis_tokens(e)}
+            if not replicated:
+                continue
+            for ret, taint in machine.escapes:
+                ret_elts = _elts(ret.value)
+                for i, expr in enumerate(ret_elts):
+                    if expr is None or i not in replicated:
+                        continue
+                    if _has_collective(expr, helpers):
+                        continue  # reduced right at the return site
+                    hot = sorted(names_in(expr) & taint)
+                    if hot:
+                        yield Finding(
+                            rule=self.rule_id, path=rel, line=ret.lineno,
+                            context=sm.body_name,
+                            message=f"output #{i} of shard_map body "
+                                    f"'{sm.body_name}' is declared "
+                                    "replicated (P()) but still carries "
+                                    f"per-shard value(s) {hot} — every "
+                                    "device returns a different array; "
+                                    "pass it through lax.psum/pmax on the "
+                                    "mesh axis first")
+
+
+class CollectiveAxisRule(Rule):
+    rule_id = "RPR402"
+    title = "collective axis name not among the shard_map spec axes"
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        rel = mod.rel()
+        for sm in find_shard_map_calls(mod):
+            body = sm.body
+            if body is None:
+                continue
+            legal = (sm.spec_axis_tokens(sm.in_specs)
+                     | sm.spec_axis_tokens(sm.out_specs))
+            # axis_names= kwarg on the shard_map/mesh call also legalizes
+            for kw in sm.call.keywords:
+                if kw.arg in ("axis_names", "mesh"):
+                    legal |= {n.id for n in ast.walk(kw.value)
+                              if isinstance(n, ast.Name)}
+                    legal |= {n.value for n in ast.walk(kw.value)
+                              if isinstance(n, ast.Constant)
+                              and isinstance(n.value, str)}
+            if not legal:
+                continue
+            for node in ast.walk(body):
+                if not (isinstance(node, ast.Call)
+                        and dotted(node.func) in COLLECTIVES):
+                    continue
+                axis_arg = None
+                if len(node.args) >= 2:
+                    axis_arg = node.args[1]
+                for kw in node.keywords:
+                    if kw.arg == "axis_name":
+                        axis_arg = kw.value
+                if axis_arg is None:
+                    continue
+                # only string-literal axis names are checked strictly; a
+                # bare variable (loop var over a sub-axis tuple, etc.) is
+                # accepted when it appears in the specs and skipped when it
+                # cannot be resolved — precision over recall
+                used = {n.value for n in ast.walk(axis_arg)
+                        if isinstance(n, ast.Constant)
+                        and isinstance(n.value, str)}
+                bad = sorted(used - legal)
+                if bad and used:
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=node.lineno,
+                        context=sm.body_name,
+                        message=f"collective {dotted(node.func)} in body "
+                                f"'{sm.body_name}' reduces over axis "
+                                f"{bad} which does not appear in the "
+                                "enclosing in_specs/out_specs — the psum "
+                                "would target a different (or missing) "
+                                "mesh axis")
+
+
+__all__ = ["UnreducedEscapeRule", "CollectiveAxisRule", "COLLECTIVES"]

@@ -1,0 +1,218 @@
+"""RPR1xx — trace-safety / recompile-hazard rules.
+
+The static complement of ``obs/audit.py``'s runtime RecompileAuditor: the
+auditor catches a steady-state recompile after it happened on an executed
+path; these rules reject the code shapes that cause them (host syncs that
+silently devectorize, Python control flow that forks the trace, per-call
+``jax.jit`` construction that defeats the compile cache) on every path in
+the tree, executed or not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.framework import (
+    Finding, ModuleInfo, Rule, dotted, dynamic_names, find_jit_contexts,
+    tainted_names,
+)
+
+# host-sync constructors/converters that force a device->host transfer (and
+# a concrete value) when applied to a traced array
+HOST_SYNC_CALLS = {
+    "float", "int", "bool", "complex",
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get",
+}
+HOST_SYNC_METHODS = {"item", "tolist", "__array__"}
+
+CACHING_DECORATORS = {
+    "lru_cache", "functools.lru_cache", "cache", "functools.cache",
+}
+
+
+def _ctx_taint(ctx) -> set[str]:
+    return tainted_names(ctx.node, ctx.traced_params)
+
+
+def _iter_stmts(node: ast.AST) -> Iterator[ast.AST]:
+    """Source-order traversal of every node inside a function body,
+    without descending into nested function defs (they get their own
+    contexts when jitted, and host-side closures are out of scope)."""
+    if isinstance(node, ast.Lambda):
+        yield from _walk_no_defs(node.body)
+        return
+    for stmt in getattr(node, "body", []):
+        yield from _walk_no_defs(stmt)
+
+
+def _walk_no_defs(node: ast.AST) -> Iterator[ast.AST]:
+    yield node
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        return
+    for child in ast.iter_child_nodes(node):
+        yield from _walk_no_defs(child)
+
+
+class HostSyncRule(Rule):
+    rule_id = "RPR101"
+    title = "host sync on a traced value inside a jit context"
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        rel = mod.rel()
+        for ctx in find_jit_contexts(mod):
+            taint = _ctx_taint(ctx)
+            for node in _iter_stmts(ctx.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = dotted(node.func)
+                if fn in HOST_SYNC_CALLS and node.args \
+                        and dynamic_names(node.args[0]) & taint:
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=node.lineno,
+                        context=ctx.name,
+                        message=f"{fn}() on traced value inside jit "
+                                f"'{ctx.name}' forces a host sync (and a "
+                                "fresh constant per call if re-traced); use "
+                                "jnp ops or hoist to the host boundary")
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in HOST_SYNC_METHODS \
+                        and dynamic_names(node.func.value) & taint:
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=node.lineno,
+                        context=ctx.name,
+                        message=f".{node.func.attr}() on traced value inside "
+                                f"jit '{ctx.name}' forces a host sync")
+
+
+class TracedControlFlowRule(Rule):
+    rule_id = "RPR102"
+    title = "Python if/while on a traced value inside a jit context"
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        rel = mod.rel()
+        for ctx in find_jit_contexts(mod):
+            taint = _ctx_taint(ctx)
+            for node in _iter_stmts(ctx.node):
+                if isinstance(node, (ast.If, ast.While)) \
+                        and dynamic_names(node.test) & taint:
+                    if isinstance(node.test, ast.Compare) and all(
+                            isinstance(op, (ast.Is, ast.IsNot))
+                            for op in node.test.ops):
+                        continue  # `x is None` is identity, not concretization
+                    kw = "if" if isinstance(node, ast.If) else "while"
+                    tr = sorted(dynamic_names(node.test) & taint)
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=node.lineno,
+                        context=ctx.name,
+                        message=f"Python `{kw}` on traced value(s) {tr} "
+                                f"inside jit '{ctx.name}' — the branch "
+                                "forks the trace (ConcretizationError or a "
+                                "recompile per outcome); use jnp.where / "
+                                "lax.cond / lax.while_loop")
+
+
+class TracedKeyRule(Rule):
+    rule_id = "RPR103"
+    title = "traced value used in an f-string / str() / dict key"
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        rel = mod.rel()
+        for ctx in find_jit_contexts(mod):
+            taint = _ctx_taint(ctx)
+            for node in _iter_stmts(ctx.node):
+                if isinstance(node, ast.JoinedStr):
+                    for v in node.values:
+                        if isinstance(v, ast.FormattedValue) \
+                                and dynamic_names(v.value) & taint:
+                            yield Finding(
+                                rule=self.rule_id, path=rel, line=node.lineno,
+                                context=ctx.name,
+                                message="traced value interpolated into an "
+                                        f"f-string inside jit '{ctx.name}' — "
+                                        "stringifying a tracer bakes a "
+                                        "per-trace key (host sync + fresh "
+                                        "constants); derive keys from static "
+                                        "shape args instead")
+                            break
+                elif isinstance(node, ast.Dict):
+                    for k in node.keys:
+                        if k is not None and dynamic_names(k) & taint:
+                            yield Finding(
+                                rule=self.rule_id, path=rel, line=k.lineno,
+                                context=ctx.name,
+                                message="traced value used as a dict key "
+                                        f"inside jit '{ctx.name}' — hashing "
+                                        "a tracer is a host sync and a "
+                                        "per-call cache key")
+                elif isinstance(node, ast.Call) and dotted(node.func) in (
+                        "str", "repr", "format") and node.args \
+                        and dynamic_names(node.args[0]) & taint:
+                    yield Finding(
+                        rule=self.rule_id, path=rel, line=node.lineno,
+                        context=ctx.name,
+                        message=f"{dotted(node.func)}() on traced value "
+                                f"inside jit '{ctx.name}' bakes a per-trace "
+                                "string (host sync)")
+
+
+class PerCallJitRule(Rule):
+    rule_id = "RPR104"
+    title = "jax.jit constructed per call inside an uncached function"
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        rel = mod.rel()
+        # collect (node, enclosing def chain with decorator info)
+        stack: list[ast.FunctionDef] = []
+        findings: list[Finding] = []
+
+        def cached(fn: ast.FunctionDef) -> bool:
+            for dec in fn.decorator_list:
+                name = dotted(dec) or (
+                    dotted(dec.func) if isinstance(dec, ast.Call) else "")
+                if name in CACHING_DECORATORS:
+                    return True
+            return False
+
+        def visit(node: ast.AST):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if stack and not any(cached(f) for f in stack):
+                    from repro.analysis.framework import jit_decorator_info
+                    if any(jit_decorator_info(d)[0]
+                           for d in node.decorator_list):
+                        findings.append(Finding(
+                            rule=self.rule_id, path=rel, line=node.lineno,
+                            context=stack[-1].name,
+                            message=f"@jax.jit def '{node.name}' inside "
+                                    f"uncached '{stack[-1].name}' mints a "
+                                    "fresh executable per call; hoist to "
+                                    "module level or an lru_cache'd "
+                                    "factory"))
+                stack.append(node)
+                for child in ast.iter_child_nodes(node):
+                    visit(child)
+                stack.pop()
+                return
+            if isinstance(node, ast.Call) and dotted(node.func) in (
+                    "jax.jit", "jit") and stack \
+                    and not any(cached(f) for f in stack):
+                # `@partial(jax.jit, ...)` decorators reach here as the
+                # partial() argument — those are defs, handled below
+                parent = stack[-1].name
+                findings.append(Finding(
+                    rule=self.rule_id, path=rel, line=node.lineno,
+                    context=parent,
+                    message=f"jax.jit(...) constructed inside '{parent}' on "
+                            "every call — each invocation mints a fresh "
+                            "executable the compile cache can never hit "
+                            "(and the auditor cannot attribute); hoist to "
+                            "module level or an lru_cache'd factory"))
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        visit(mod.tree)
+        yield from findings
+
+
+__all__ = ["HostSyncRule", "TracedControlFlowRule", "TracedKeyRule",
+           "PerCallJitRule", "HOST_SYNC_CALLS", "CACHING_DECORATORS"]

@@ -44,6 +44,7 @@ class CBDSResult(NamedTuple):
     n_legit: jax.Array       # int32 [] vertices absorbed by phase 2
 
 
+# repro: proof
 def _augment_once(
     member: jax.Array,
     m_v: jax.Array,

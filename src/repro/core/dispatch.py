@@ -55,6 +55,7 @@ def resolve_kernel(kernel: bool | None) -> bool:
     return kernel_default() if kernel is None else bool(kernel)
 
 
+# repro: proof
 def assert_exact_envelope(*counts: int) -> None:
     """Fail fast (host-side, plan-build/engine-init time) if any capacity
     could push a kernel-path float32 sum past exact-integer range."""

@@ -73,6 +73,7 @@ def _level_fixpoint(
     return jax.lax.while_loop(cond, body, state)
 
 
+# repro: unaudited -- static one-shot analysis entry point; dispatched outside audited engine ops, so it is deliberately absent from compile_count()
 @partial(jax.jit, static_argnames=("n_nodes", "kernel"))
 def _kcore_jit(
     src: jax.Array, dst: jax.Array, n_nodes: int, n_edges: jax.Array,

@@ -56,6 +56,7 @@ def _prefix_kernel(x_ref, out_ref, carry_ref):
     carry_ref[0, 0] = carry_ref[0, 0] + cs[0, P_TILE - 1]
 
 
+# repro: unaudited -- kernel-tier primitive; audited indirectly through the engine jits that inline it (delta/refine providers), counting it here would double-book
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def prefix_sum(x: jax.Array, *, interpret: bool = True) -> jax.Array:
     """Inclusive prefix sum of a 1-D int32/bool array, exact int32 out.
@@ -82,6 +83,7 @@ def prefix_sum(x: jax.Array, *, interpret: bool = True) -> jax.Array:
     return out.reshape(-1)[:e].astype(jnp.int32)
 
 
+# repro: unaudited -- kernel-tier primitive; inlined into audited engine jits when called under trace
 @functools.partial(jax.jit, static_argnames=("out_size", "fill", "interpret"))
 def stream_compact(
     values: jax.Array,

@@ -138,6 +138,7 @@ def _note_unsorted(op: str) -> None:
         reg.counter("kernel_unsorted_fallback_total", op=op).inc()
 
 
+# repro: unaudited -- kernel-tier primitive; inlined into audited engine jits when called under trace
 @partial(jax.jit, static_argnames=("num_segments", "impl", "presorted"))
 def _segment_sum_jit(
     values: jax.Array,
@@ -175,6 +176,7 @@ def segment_sum(
                             impl=impl, presorted=presorted)
 
 
+# repro: unaudited -- kernel-tier primitive; inlined into audited engine jits when called under trace
 @partial(jax.jit, static_argnames=("n_nodes", "impl", "presorted"))
 def _peel_update_jit(
     src: jax.Array,
@@ -222,6 +224,7 @@ def peel_update(
                             presorted=presorted)
 
 
+# repro: unaudited -- kernel-tier primitive; inlined into audited engine jits when called under trace
 @partial(jax.jit, static_argnames=("num_segments", "impl", "presorted"))
 def _segment_embed_jit(
     table: jax.Array,

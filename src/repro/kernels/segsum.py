@@ -70,6 +70,7 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# repro: unaudited -- kernel-tier primitive; inlined into audited engine jits when called under trace
 @functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
 def segment_sum_sorted(
     values: jax.Array,

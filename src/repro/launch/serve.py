@@ -8,6 +8,7 @@ dry-run lowers (launch/steps.py `prefill`/`decode`).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,16 @@ class ServeStats:
     prefill_tokens: int
     decoded_tokens: int
     outputs: np.ndarray
+
+
+# repro: unaudited -- demo serve path; not part of the engine compile_count
+# contract (the dry-run lowers the production decode via launch/steps.py)
+@lru_cache(maxsize=None)
+def _make_decode_step(cfg: TransformerConfig):
+    """One jitted decode step per (frozen, hashable) config — repeated
+    serve_batch calls with the same config reuse the compiled executable
+    instead of minting a fresh jax.jit wrapper per call."""
+    return jax.jit(lambda p, c, t, n: decode_step(p, c, t, n, cfg))
 
 
 def serve_batch(params: dict, cfg: TransformerConfig, prompts: np.ndarray,
@@ -41,7 +52,7 @@ def serve_batch(params: dict, cfg: TransformerConfig, prompts: np.ndarray,
             lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
             cache)
 
-    step = jax.jit(lambda p, c, t, n: decode_step(p, c, t, n, cfg))
+    step = _make_decode_step(cfg)
     key = jax.random.PRNGKey(seed)
     tok = jnp.argmax(logits[:, -1], axis=-1)
     out = [tok]

@@ -52,6 +52,7 @@ class StepBundle:
 
     def lower(self, mesh):
         del mesh  # NamedShardings embed the mesh; no context needed
+        # repro: allow RPR104 -- AOT path: wrapper is consumed by .lower() immediately, never dispatched, so no per-call cache miss
         jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
                          out_shardings=self.out_shardings,
                          donate_argnums=self.donate_argnums)

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Any, Callable, Iterator
 
 import jax
@@ -129,6 +130,18 @@ def restore_elastic(ckpt: CheckpointManager, state_template, shardings=None):
 # ---------------------------------------------------------------------------
 # the paper's pipeline under the same fault-tolerance machinery
 # ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _make_jitted_peel_pass(mesh, n_nodes: int, eps: float):
+    """One jitted sharded peel pass per (mesh, |V|, eps): restarts of the
+    same topology replay against the cached executable instead of minting
+    a new one, and the auditor sees it through SHARDED_JITS."""
+    from repro.core.distributed import SHARDED_JITS, make_peel_pass
+
+    run = jax.jit(make_peel_pass(mesh, n_nodes, eps))
+    SHARDED_JITS.append(run)
+    return run
+
+
 def peel_with_restarts(graph, mesh, eps: float, ckpt: CheckpointManager,
                        fail_at_pass: int | None = None) -> dict:
     """Distributed P-Bahmani with per-pass checkpointing + simulated failure.
@@ -138,11 +151,11 @@ def peel_with_restarts(graph, mesh, eps: float, ckpt: CheckpointManager,
     pass (DESIGN.md §2)."""
     import jax.numpy as jnp
 
-    from repro.core.distributed import make_peel_pass, shard_edges
+    from repro.core.distributed import shard_edges
     from repro.core.pbahmani import init_state
 
     src, dst = shard_edges(graph, mesh)
-    peel_pass = jax.jit(make_peel_pass(mesh, graph.n_nodes, eps))
+    peel_pass = _make_jitted_peel_pass(mesh, graph.n_nodes, eps)
 
     state = init_state(src, dst, graph.n_nodes, graph.n_edges)
     start = ckpt.latest_step()

@@ -69,14 +69,34 @@ class RecompileAuditor:
     _seq: int = 0
 
     # -- providers -----------------------------------------------------------
-    def register_provider(self, provider: Callable[[], Iterable]) -> None:
+    def register_provider(self, provider: Callable[[], Iterable],
+                          name: str | None = None) -> None:
         """``provider()`` yields the currently-live jit entry points (lists
-        may grow as lru-cached factories mint new ones)."""
-        self._providers.append(provider)
+        may grow as lru-cached factories mint new ones). ``name`` labels
+        the provider in :meth:`providers_snapshot`; defaults to the
+        provider's ``__name__``."""
+        self._providers.append(
+            (name or getattr(provider, "__name__", "provider"), provider))
 
     def _iter_fns(self):
-        for provider in self._providers:
+        for _name, provider in self._providers:
             yield from provider()
+
+    def providers_snapshot(self) -> dict[str, list[str]]:
+        """Provider name -> sorted qualified (``module.name``) entry points
+        it currently yields. The shared source of truth between this
+        runtime auditor and the static RPR201 auditor-coverage rule
+        (``repro.analysis``): an entry point absent from every list here
+        is invisible to ``total_compile_count()``."""
+        out: dict[str, list[str]] = {}
+        for name, provider in self._providers:
+            entries = set()
+            for fn in provider():
+                mod = getattr(fn, "__module__", "") or ""
+                fn_name = getattr(fn, "__name__", "jit")
+                entries.add(f"{mod}.{fn_name}" if mod else fn_name)
+            out[name] = sorted(entries)
+        return out
 
     # -- counting ------------------------------------------------------------
     def total_compile_count(self) -> int:

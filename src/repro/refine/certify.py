@@ -53,11 +53,13 @@ class GapCertificate:
     proves_optimal: bool
 
 
+# repro: proof
 def better_fraction(a_num: int, a_den: int, b_num: int, b_den: int) -> bool:
     """True iff a_num/a_den < b_num/b_den (exact; denominators > 0)."""
     return a_num * b_den < b_num * a_den
 
 
+# repro: proof
 def dual_fraction(loads: np.ndarray, rounds: int) -> tuple[int, int]:
     """The k-sweep dual bound as an exact fraction (num, den).
 
@@ -86,6 +88,7 @@ def dual_fraction(loads: np.ndarray, rounds: int) -> tuple[int, int]:
         return 0, int(rounds)
     cs = np.cumsum(np.sort(loads)[::-1])
     ks = np.arange(1, n + 1, dtype=np.int64)
+    # repro: allow RPR301,RPR302,RPR303 -- float sweep only SELECTS k (any k is sound); the returned fraction is exact
     bounds = np.maximum(cs / (ks * float(rounds)), (ks - 2) / 2.0)
     j = int(np.argmin(bounds))
     k = j + 1
@@ -96,15 +99,17 @@ def dual_fraction(loads: np.ndarray, rounds: int) -> tuple[int, int]:
     return avg_num, avg_den
 
 
+# repro: proof
 def make_certificate(best_ne: int, best_nv: int, dual_num: int,
                      dual_den: int) -> GapCertificate:
     best_ne, best_nv = int(best_ne), int(best_nv)
     dual_num, dual_den = int(dual_num), int(max(dual_den, 1))
+    # repro: allow RPR301,RPR302 -- float64 convenience field; proves_optimal below is the exact compare
     density = best_ne / best_nv if best_nv > 0 else 0.0
-    dual = dual_num / dual_den
+    dual = dual_num / dual_den  # repro: allow RPR302 -- convenience field, not the proof
     proves = best_ne * dual_den >= dual_num * best_nv
-    gap = 0.0 if proves else max(dual - density, 0.0)
-    rel_gap = 0.0 if proves else (gap / dual if dual > 0 else 0.0)
+    gap = 0.0 if proves else max(dual - density, 0.0)  # repro: allow RPR301 -- reporting only
+    rel_gap = 0.0 if proves else (gap / dual if dual > 0 else 0.0)  # repro: allow RPR301,RPR302 -- reporting only
     return GapCertificate(
         best_ne=best_ne, best_nv=best_nv, dual_num=dual_num,
         dual_den=dual_den, density=density, dual_bound=dual, gap=gap,
@@ -112,6 +117,7 @@ def make_certificate(best_ne: int, best_nv: int, dual_num: int,
     )
 
 
+# repro: proof
 def max_fraction(a: tuple[int, int], b: tuple[int, int]) -> tuple[int, int]:
     """The not-smaller of two nonnegative fractions (ne, nv); an empty
     denominator loses. Used to host-guard the refined best against the seed

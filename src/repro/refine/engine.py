@@ -61,6 +61,7 @@ class RefineResult:
     history: list = field(default_factory=list)
 
 
+# repro: proof
 def _seed_counts(mask: np.ndarray, u: np.ndarray, v: np.ndarray) -> tuple:
     """Exact integer (ne, nv) of the subgraph induced by ``mask`` from host
     endpoint arrays carrying one undirected entry per edge (no sentinels
@@ -150,10 +151,13 @@ def refine(
     ``kernel`` selects the Pallas segment-sum tier (None = deploy default);
     kernel mode feeds ``graph.dst_sorted()`` lanes — same certificates.
     """
-    from repro.core.dispatch import resolve_kernel
+    from repro.core.dispatch import assert_exact_envelope, resolve_kernel
 
     kernel = resolve_kernel(kernel)
     n = graph.n_nodes
+    # refine_resident's kernel tier accumulates failed-neighbor counts in
+    # f32 lanes — exact only below 2^24 (core/dispatch.py)
+    assert_exact_envelope(graph.n_directed, n)
     if n == 0 or graph.n_edges == 0:
         cert = make_certificate(0, 0, 0, 1)
         return RefineResult(

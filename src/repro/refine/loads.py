@@ -131,6 +131,7 @@ def refine_pass(
     fail_d = failed[dst_c] & live_edge
 
     # survivor degree decrement: mirror-entry aggregation as in pbahmani_pass
+    # repro: allow RPR304 -- traced body; 2^24 envelope asserted by the host callers (refine.engine.refine, stream.delta)
     delta_to_dst = peel_delta(fail_s, dst, n_nodes, kernel)
     # edge charging: (u->v) charges u iff u failed and (v survived or u<v);
     # exactly one of the two directed entries charges, so each undirected
@@ -140,6 +141,7 @@ def refine_pass(
     # then run over the dst-sorted layout the kernel tier needs, and the
     # integer result is identical to the historical src-side aggregation.
     assign_d = fail_d & (~fail_s | (dst_c < src_c))
+    # repro: allow RPR304 -- traced body; envelope asserted by host callers
     inc = peel_delta(assign_d, dst, n_nodes, kernel)
 
     removed_directed = jnp.sum((fail_s | fail_d).astype(jnp.int32))

@@ -354,13 +354,14 @@ def _jit_entry_points():
     fused is imported lazily to avoid a module cycle."""
     from repro.stream import fused as _fused
 
-    return [_apply_batch_jit, _warm_peel_jit, _pbahmani_jit, _cbds_jit,
-            _bucket_peel_jit, _plan_jit, _batched_apply_jit,
-            _batched_warm_peel_jit, _batched_bucket_peel_jit] + list(
+    return [_apply_batch_jit, _apply_batch_sorted_jit, _warm_peel_jit,
+            _pbahmani_jit, _cbds_jit, _bucket_peel_jit, _plan_jit,
+            _batched_apply_jit, _batched_warm_peel_jit,
+            _batched_bucket_peel_jit] + list(
         SHARDED_JITS) + list(REFINE_JITS) + list(_fused.FUSED_JITS)
 
 
-AUDITOR.register_provider(_jit_entry_points)
+AUDITOR.register_provider(_jit_entry_points, name="stream")
 
 
 @dataclass
