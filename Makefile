@@ -13,6 +13,8 @@ COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	bench-shard-smoke \
 	bench-tenants-smoke bench-refine-smoke bench-density-smoke \
 	bench-epsilon-smoke bench-kernels-smoke bench-check bench-baseline \
+	bench-stream-large bench-shard-large bench-tenants-large \
+	bench-check-large bench-baseline-large \
 	bench metrics-demo deps-dev
 
 test:
@@ -83,6 +85,31 @@ bench-baseline: bench-smoke bench-prune-smoke bench-shard-smoke \
 		bench-tenants-smoke bench-refine-smoke bench-density-smoke \
 		bench-epsilon-smoke bench-kernels-smoke
 	$(PY) benchmarks/check_regression.py --update
+
+# large-scale tier (ROADMAP P2): 16k-node graphs, run by the scheduled
+# large-bench workflow (cron + manual dispatch), gated against the
+# separate benchmarks/baseline_large.json band with a looser tolerance
+# (longer windows, noisier shared runners)
+bench-stream-large:
+	$(PY) benchmarks/bench_stream.py --large --emit-metrics
+
+bench-shard-large:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) benchmarks/bench_shard.py --large --emit-metrics
+
+bench-tenants-large:
+	$(PY) benchmarks/bench_tenants.py --large --emit-metrics
+
+bench-check-large:
+	$(PY) benchmarks/check_regression.py --only stream,shard,tenants \
+		--baseline benchmarks/baseline_large.json --tolerance 0.4
+
+# refresh benchmarks/baseline_large.json from the current BENCH_*.json
+# files (run the three large benches first)
+bench-baseline-large: bench-stream-large bench-shard-large \
+		bench-tenants-large
+	$(PY) benchmarks/check_regression.py --only stream,shard,tenants \
+		--baseline benchmarks/baseline_large.json --update
 
 bench:
 	$(PY) benchmarks/run.py

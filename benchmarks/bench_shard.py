@@ -43,8 +43,10 @@ import numpy as np
 
 from benchmarks._artifacts import write_bench_json
 from benchmarks.bench_prune import FAMILIES, MIXES, _churn_batches, _family_edges
+from repro.stream import FusedEngine, FusedPool
 from repro.stream.buffer import next_pow2
 from repro.stream.delta import DeltaEngine, default_stream_mesh
+from repro.stream.fused import query_group
 from repro.utils.timing import time_fn
 
 
@@ -124,6 +126,101 @@ def _bench_cell(family: str, mix: str, del_frac: float, n_nodes: int,
     }
 
 
+def _bench_fused_cell(n_tenants: int, n_nodes: int, capacity: int,
+                      iters: int, mesh, seed: int = 0) -> dict:
+    """Fused+sharded bucket (ISSUE 9): ``n_tenants`` sharded tenants share
+    one vmap-inside-shard_map bucket stack, so a group flush issues one
+    collective per pass for the whole bucket. Measured against (a) a solo
+    single-device engine per tenant — ``query_ratio_worst``, the headline:
+    the per-tenant amortized cost of sharding once the collective is
+    amortized T ways — and (b) a solo *sharded* engine on the same stream —
+    ``fused_sharded_speedup``, the win over pre-fusion sharding. Bit-exact
+    per-tenant parity with both baselines is asserted, as is a compile-free
+    measured window (engines run pruned=False, the bench_tenants
+    convention: plan-bucket shapes are data-dependent and would blur the
+    zero-recompile assertion)."""
+    rng = np.random.default_rng(seed)
+    pool = FusedPool()
+    solo, fused = [], {}
+    solo_sharded = DeltaEngine(n_nodes, capacity=capacity,
+                               refresh_every=10**9, pruned=False,
+                               sharded=True, mesh=mesh)
+    for i in range(n_tenants):
+        s = DeltaEngine(n_nodes, capacity=capacity, refresh_every=10**9,
+                        pruned=False)
+        f = FusedEngine(f"t{i}", pool, n_nodes, capacity=capacity,
+                        refresh_every=10**9, pruned=False,
+                        sharded=True, mesh=mesh)
+        seed_edges = rng.integers(0, n_nodes, (3 * n_nodes, 2))
+        s.apply_updates(insert=seed_edges)
+        f.apply_updates(insert=seed_edges)
+        if i == 0:
+            solo_sharded.apply_updates(insert=seed_edges)
+        s.query()
+        solo.append(s)
+        fused[f"t{i}"] = f
+    solo_sharded.query()
+
+    def flush():
+        for f in fused.values():
+            f._cached_query = None  # defeat memoization: time the peel
+        return query_group(fused)
+
+    def best_of(fn, reps=3):
+        # min over repeated windows: the ratios feed regression gates, so
+        # a single contended window must not fake a regression
+        best, out = float("inf"), None
+        for _ in range(reps):
+            t, out = time_fn(fn, iters=iters, warmup=1)
+            best = min(best, t)
+        return best, out
+
+    flush()  # warm the full group-flush shape
+    compiles_before = DeltaEngine.compile_count()
+
+    t_fused, results = best_of(flush)
+    t_per_tenant = t_fused / n_tenants
+
+    t_solo = []
+    for s in solo:
+        def timed_query(s=s):
+            s._cached_query = None
+            return s.query()
+
+        t, _ = best_of(timed_query)
+        t_solo.append(t)
+
+    def timed_sharded():
+        solo_sharded._cached_query = None
+        return solo_sharded.query()
+
+    t_sharded, q_sharded = best_of(timed_sharded)
+    steady_compiles = DeltaEngine.compile_count() - compiles_before
+
+    for i, s in enumerate(solo):
+        q1, q2 = s.query(), results[f"t{i}"]
+        assert q1.density == q2.density, (i, q1.density, q2.density)
+        assert np.array_equal(q1.mask, q2.mask), i
+        assert q1.passes == q2.passes, (i, q1.passes, q2.passes)
+    assert q_sharded.density == results["t0"].density
+    assert q_sharded.passes == results["t0"].passes
+
+    return {
+        "family": "fused_bucket",
+        "mix": "static",
+        "n_tenants": n_tenants,
+        "n_edges": solo[0].n_edges,
+        "n_shards": solo_sharded.n_shards,
+        "query_single_ms": float(np.median(t_solo)) * 1e3,
+        "query_solo_sharded_ms": t_sharded * 1e3,
+        "query_fused_per_tenant_ms": t_per_tenant * 1e3,
+        "query_ratio_worst": max(t_per_tenant / max(t, 1e-12)
+                                 for t in t_solo),
+        "fused_sharded_speedup": t_sharded / max(t_per_tenant, 1e-12),
+        "steady_compiles": steady_compiles,
+    }
+
+
 def run(n_nodes: int = 4096, batch_size: int = 512, n_batches: int = 12,
         families=FAMILIES, mixes=None, csv: bool = True) -> list[dict]:
     mesh = default_stream_mesh()
@@ -148,38 +245,71 @@ def run(n_nodes: int = 4096, batch_size: int = 512, n_batches: int = 12,
     return rows
 
 
-def main(smoke: bool = False) -> None:
+def _record(rows: list[dict], fcell: dict, mode: str) -> None:
+    """One BENCH_shard.json for the solo grid + the fused bucket cell.
+    ``query_ratio_worst`` is the ISSUE 9 headline (fused+sharded per-tenant
+    latency / solo single-device latency, worst tenant — gated "lower" in
+    check_regression); the pre-fusion solo-sharded ratio stays recorded as
+    ``solo_query_ratio_worst`` for the trajectory."""
+    write_bench_json(
+        "shard",
+        {"steady_compiles": max([r["steady_compiles"] for r in rows]
+                                + [fcell["steady_compiles"]]),
+         "n_shards": rows[0]["n_shards"],
+         "solo_query_ratio_worst": max(r["query_ratio"] for r in rows),
+         "query_ratio_worst": fcell["query_ratio_worst"],
+         "fused_sharded_speedup": fcell["fused_sharded_speedup"]},
+        rows + [fcell], mode=mode)
+
+
+def main(smoke: bool = False, large: bool = False,
+         strict: bool = False) -> None:
     """Parity (bit-identical triples) and zero steady-state compiles are
     always asserted; latency ratios are reported, not enforced (CPU meshes
-    pay collective overhead the assertion must not depend on)."""
+    pay collective overhead the assertion must not depend on) — except the
+    ISSUE 9 acceptance target ``query_ratio_worst <= 1.5`` at 8 tenants
+    per bucket, enforced under ``--strict`` (bench-suite convention)."""
+    mesh = default_stream_mesh()
     if smoke:
         rows = run(n_nodes=512, batch_size=128, n_batches=4,
                    mixes={"churn": 0.5})
-        assert all(r["steady_compiles"] == 0 for r in rows), rows
-        write_bench_json(
-            "shard",
-            {"steady_compiles": max(r["steady_compiles"] for r in rows),
-             "n_shards": rows[0]["n_shards"],
-             "query_ratio_worst": max(r["query_ratio"] for r in rows)},
-            rows, mode="smoke")
-        print(f"# smoke ok: sharded == single-device bit-identical on "
-              f"{rows[0]['n_shards']} shard(s), zero steady-state compiles")
-        return
-    rows = run()
-    assert all(r["steady_compiles"] == 0 for r in rows), "hot path recompiled"
-    write_bench_json(
-        "shard",
-        {"steady_compiles": max(r["steady_compiles"] for r in rows),
-         "n_shards": rows[0]["n_shards"],
-         "query_ratio_worst": max(r["query_ratio"] for r in rows)},
-        rows)
-    worst = max(r["query_ratio"] for r in rows)
-    print(f"# sharded == single-device bit-identical on "
-          f"{rows[0]['n_shards']} shard(s); worst query overhead "
-          f"{worst:.2f}x (CPU collectives)")
+        # the fused cell runs at 1024 nodes even in the smoke: below ~1k
+        # nodes the flush is all fixed overhead and the ratio is noise
+        fcell = _bench_fused_cell(8, n_nodes=1024, capacity=8192, iters=5,
+                                  mesh=mesh)
+        mode = "smoke"
+    elif large:
+        # ROADMAP P2 scale tier: 16k-node graphs, scheduled CI only
+        rows = run(n_nodes=16384, batch_size=1024, n_batches=8,
+                   families=("power_law", "uniform"), mixes={"churn": 0.5})
+        fcell = _bench_fused_cell(8, n_nodes=16384, capacity=131072,
+                                  iters=3, mesh=mesh)
+        mode = "large"
+    else:
+        rows = run()
+        fcell = _bench_fused_cell(8, n_nodes=1024, capacity=8192, iters=10,
+                                  mesh=mesh)
+        mode = "full"
+    assert all(r["steady_compiles"] == 0 for r in rows), rows
+    assert fcell["steady_compiles"] == 0, fcell
+    _record(rows, fcell, mode)
+    print(f"# {mode} ok: sharded == single-device bit-identical on "
+          f"{rows[0]['n_shards']} shard(s), zero steady-state compiles; "
+          f"fused+sharded per-tenant ratio {fcell['query_ratio_worst']:.2f}x "
+          f"vs solo (solo-sharded {max(r['query_ratio'] for r in rows):.2f}x"
+          f"), {fcell['fused_sharded_speedup']:.2f}x over solo-sharded at "
+          f"{fcell['n_tenants']} tenants/bucket")
+    if fcell["query_ratio_worst"] > 1.5:
+        msg = (f"acceptance target query_ratio_worst <= 1.5 at 8 "
+               f"tenants/bucket not met: {fcell['query_ratio_worst']:.2f}x")
+        if strict:
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg} (machine-dependent; rerun with --strict "
+              f"to enforce)")
 
 
 if __name__ == "__main__":
     if "--emit-metrics" in sys.argv:
         os.environ["BENCH_EMIT_METRICS"] = "1"
-    main(smoke="--smoke" in sys.argv)
+    main(smoke="--smoke" in sys.argv, large="--large" in sys.argv,
+         strict="--strict" in sys.argv)

@@ -150,13 +150,21 @@ def _record(res: dict, mode: str) -> None:
         [res], mode=mode)
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, large: bool = False):
     if smoke:
         res = run(n_nodes=512, batch_size=128, n_batches=6)
         assert res["steady_compiles"] == 0, res
         _record(res, "smoke")
         print("# smoke ok: incremental == recompute, zero steady-state "
               "compiles")
+        return
+    if large:
+        # ROADMAP P2 scale tier (scheduled CI): 16k-node evolving graph
+        res = run(n_nodes=16384, batch_size=1024, n_batches=12)
+        assert res["steady_compiles"] == 0, "hot path recompiled!"
+        _record(res, "large")
+        print(f"# large ok: ingest {res['ingest_speedup']:.1f}x the static "
+              f"rebuild+peel path at 16k nodes")
         return
     res = run()
     assert res["steady_compiles"] == 0, "hot path recompiled!"
@@ -168,4 +176,4 @@ def main(smoke: bool = False):
 if __name__ == "__main__":
     if "--emit-metrics" in sys.argv:
         os.environ["BENCH_EMIT_METRICS"] = "1"
-    main(smoke="--smoke" in sys.argv)
+    main(smoke="--smoke" in sys.argv, large="--large" in sys.argv)

@@ -188,7 +188,8 @@ def run(n_nodes: int = 256, capacity: int = 2048, batch_size: int = 128,
     return rows
 
 
-def main(smoke: bool = False, strict: bool = False) -> None:
+def main(smoke: bool = False, strict: bool = False,
+         large: bool = False) -> None:
     """Parity (bit-identical triples), the evict/join row-swap contract and
     zero steady-state compiles are always asserted; ``strict``
     additionally enforces the >=3x acceptance target at 16 tenants, which
@@ -207,6 +208,23 @@ def main(smoke: bool = False, strict: bool = False) -> None:
         print(f"# smoke ok: fused == sequential bit-identical, zero "
               f"steady-state compiles across evict/join, "
               f"{top['speedup']:.2f}x at 16 tenants")
+        return
+    if large:
+        # ROADMAP P2 scale tier (scheduled CI): 16k-node tenants — above
+        # DENSE_NODE_CAP, so this exercises the sparse vmapped peel at the
+        # same metric names the regular baseline gates
+        rows = run(n_nodes=16384, capacity=65536, batch_size=512, iters=3,
+                   tenant_counts=(4, 16))
+        assert all(r["steady_compiles"] == 0 for r in rows), rows
+        top = rows[-1]
+        write_bench_json(
+            "tenants",
+            {"fused_speedup_16": top["speedup"],
+             "fused_qps_16": top["fused_qps"],
+             "steady_compiles": max(r["steady_compiles"] for r in rows)},
+            rows, mode="large")
+        print(f"# large ok: fused == sequential bit-identical at 16k-node "
+              f"tenants, {top['speedup']:.2f}x at 16 tenants")
         return
     rows = run()
     assert all(r["steady_compiles"] == 0 for r in rows), "hot path recompiled"
@@ -232,4 +250,5 @@ def main(smoke: bool = False, strict: bool = False) -> None:
 if __name__ == "__main__":
     if "--emit-metrics" in sys.argv:
         os.environ["BENCH_EMIT_METRICS"] = "1"
-    main(smoke="--smoke" in sys.argv, strict="--strict" in sys.argv)
+    main(smoke="--smoke" in sys.argv, strict="--strict" in sys.argv,
+         large="--large" in sys.argv)

@@ -7,17 +7,21 @@ regression, so performance changes land measured instead of silent:
   * ``higher``-is-better metrics (speedups — machine-portable ratios, not
     absolute wall clock) fail below ``(1 - tolerance) * baseline``
     (default tolerance 25%);
+  * ``lower``-is-better metrics (overhead ratios like the fused+sharded
+    ``query_ratio_worst``) fail above ``(1 + tolerance) * baseline``;
   * ``zero`` metrics (steady-state compile counts) fail on any non-zero
     value, regardless of baseline.
 
 ``--update`` rewrites the baseline from the current files instead of
 checking (the ``make bench-baseline`` path); metrics present in a BENCH
 file but absent from the baseline are reported and pass (so adding a new
-benchmark doesn't brick CI until its baseline lands).
+benchmark doesn't brick CI until its baseline lands). ``--only`` limits
+the gate to a comma-separated subset of benches — the scheduled
+large-scale tier runs three of them against ``baseline_large.json``.
 
 Usage:
   python benchmarks/check_regression.py [--dir .] [--tolerance 0.25]
-      [--baseline benchmarks/baseline.json] [--update]
+      [--baseline benchmarks/baseline.json] [--only stream,shard] [--update]
 """
 from __future__ import annotations
 
@@ -33,9 +37,9 @@ import sys
 # algorithmic quality ratios are deterministic seeded outputs, so a 25%
 # floor would be vacuous (0.997 quality passing at 0.748) where 2% is the
 # real signal; "zero": hard-fails on non-zero (the no-recompile
-# contract); anything unlisted is recorded in the artifact but not gated
-# (e.g. the sharded query_ratio, a CPU-collective cost model, not a
-# target).
+# contract); "lower": overhead ratios, failing above the baseline ceiling;
+# anything unlisted is recorded in the artifact but not gated (e.g. the
+# solo-sharded query ratio, a CPU-collective cost model, not a target).
 QUALITY_TOL = 0.02
 GATES = {
     "stream": {"ingest_speedup": "higher", "steady_compiles": "zero"},
@@ -48,7 +52,14 @@ GATES = {
     "kernels": {"presorted_speedup": ("higher", QUALITY_TOL),
                 "roofline_ratio": ("higher", 0.75),
                 "steady_compiles": "zero"},
-    "shard": {"steady_compiles": "zero"},
+    # fused+sharded buckets (ISSUE 9): query_ratio_worst is the headline —
+    # worst per-tenant latency of a fused+sharded bucket flush over the
+    # solo single-device query, gated so the unified placement's overhead
+    # can only shrink; fused_sharded_speedup is the win over pre-fusion
+    # solo-sharded serving
+    "shard": {"steady_compiles": "zero",
+              "query_ratio_worst": "lower",
+              "fused_sharded_speedup": "higher"},
     "tenants": {"fused_speedup_16": "higher", "steady_compiles": "zero"},
     # algorithmic-quality gates (deterministic seeded graphs, not wall
     # clock): min reported-density / rho* ratios across each suite
@@ -101,10 +112,11 @@ def check_metrics_files(directory: str) -> list[str]:
     return failures
 
 
-def check(benches: dict, baseline: dict, tolerance: float) -> list[str]:
+def check(benches: dict, baseline: dict, tolerance: float,
+          gate_table: dict | None = None) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
     failures = []
-    for name, gates in GATES.items():
+    for name, gates in (GATES if gate_table is None else gate_table).items():
         payload = benches.get(name)
         if payload is None:
             failures.append(f"{name}: BENCH_{name}.json missing — did the "
@@ -131,6 +143,16 @@ def check(benches: dict, baseline: dict, tolerance: float) -> list[str]:
                 print(f"note {name}.{metric} = {cur:.3f} (no baseline — "
                       f"run `make bench-baseline` to gate it)")
                 continue
+            if direction == "lower":
+                ceiling = (1.0 + tol) * ref
+                if cur > ceiling:
+                    failures.append(
+                        f"{name}.{metric}: {cur:.3f} > {ceiling:.3f} "
+                        f"(> {tol:.0%} regression vs baseline {ref:.3f})")
+                else:
+                    print(f"ok   {name}.{metric} = {cur:.3f} "
+                          f"(baseline {ref:.3f}, ceiling {ceiling:.3f})")
+                continue
             floor = (1.0 - tol) * ref
             if cur < floor:
                 failures.append(
@@ -142,15 +164,16 @@ def check(benches: dict, baseline: dict, tolerance: float) -> list[str]:
     return failures
 
 
-def update_baseline(benches: dict, path: str) -> None:
+def update_baseline(benches: dict, path: str,
+                    gate_table: dict | None = None) -> None:
     baseline = {}
-    for name, gates in GATES.items():
+    for name, gates in (GATES if gate_table is None else gate_table).items():
         payload = benches.get(name)
         if payload is None:
             print(f"note {name}: no BENCH file, baseline entry skipped")
             continue
         entry = {m: payload["metrics"][m] for m, d in gates.items()
-                 if _gate_spec(d, 0.0)[0] == "higher"
+                 if _gate_spec(d, 0.0)[0] in ("higher", "lower")
                  and m in payload.get("metrics", {})}
         if entry:
             baseline[name] = {k: round(float(v), 3)
@@ -171,17 +194,28 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current BENCH files")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to gate (default all)")
     args = ap.parse_args(argv)
+
+    gate_table = GATES
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = sorted(set(names) - set(GATES))
+        if unknown:
+            print(f"unknown bench(es) in --only: {unknown}", file=sys.stderr)
+            return 2
+        gate_table = {n: GATES[n] for n in names}
 
     benches = load_bench_files(args.dir)
     if args.update:
-        update_baseline(benches, args.baseline)
+        update_baseline(benches, args.baseline, gate_table)
         return 0
     baseline = {}
     if os.path.exists(args.baseline):
         with open(args.baseline) as f:
             baseline = json.load(f)
-    failures = check(benches, baseline, args.tolerance)
+    failures = check(benches, baseline, args.tolerance, gate_table)
     failures += check_metrics_files(args.dir)
     for msg in failures:
         print(f"FAIL {msg}", file=sys.stderr)

@@ -1,6 +1,6 @@
 """Rule catalog for the invariant linter.
 
-Four families, one module each — a new rule is a subclass + a catalog
+Five families, one module each — a new rule is a subclass + a catalog
 entry (~50 lines; see ROADMAP "Static analysis" for planned additions):
 
 ==========  ================================================================
@@ -16,6 +16,7 @@ RPR303      float dtype / float() cast inside a proof scope
 RPR304      f32-accumulating kernel call without assert_exact_envelope
 RPR401      per-shard reduction escapes a shard_map body without psum/pmax
 RPR402      collective axis name not in the enclosing in_specs mesh axes
+RPR501      bucket-factory argument missing from the fused bucket key
 ==========  ================================================================
 """
 from repro.analysis.rules.audit import AuditCoverageRule
@@ -25,6 +26,7 @@ from repro.analysis.rules.collective import (
 from repro.analysis.rules.exact import (
     EnvelopeRule, FloatDtypeRule, FloatLiteralRule, TrueDivisionRule,
 )
+from repro.analysis.rules.fused import BucketKeyRule
 from repro.analysis.rules.trace import (
     HostSyncRule, PerCallJitRule, TracedControlFlowRule, TracedKeyRule,
 )
@@ -34,6 +36,7 @@ ALL_RULES = [
     AuditCoverageRule,
     FloatLiteralRule, TrueDivisionRule, FloatDtypeRule, EnvelopeRule,
     UnreducedEscapeRule, CollectiveAxisRule,
+    BucketKeyRule,
 ]
 
 RULE_CATALOG = {cls.rule_id: cls.title for cls in ALL_RULES}

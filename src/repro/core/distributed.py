@@ -45,6 +45,13 @@ def edge_sharding(mesh) -> NamedSharding:
     return NamedSharding(mesh, P(tuple(mesh.axis_names)))
 
 
+def stacked_edge_sharding(mesh) -> NamedSharding:
+    """[T, lanes] tenant stacks: leading tenant axis replicated, lane axis
+    sharded over ALL mesh axes — the fused-bucket layout where every shard
+    holds its slot block for every tenant in the bucket."""
+    return NamedSharding(mesh, P(None, tuple(mesh.axis_names)))
+
+
 def replicated_sharding(mesh) -> NamedSharding:
     """Fully-replicated placement for |V|-sized state on the same mesh."""
     return NamedSharding(mesh, P())
@@ -107,29 +114,40 @@ def _local_delta(failed, active, src_l, dst_l, n_nodes, axes):
     return delta, removed
 
 
+def _peel_pass_body(state: PeelState, src_l, dst_l, n_nodes, eps,
+                    axes) -> PeelState:
+    """One peel pass as seen by a single shard: the pbahmani_pass
+    recurrence with the degree scatter realized as ``_local_delta``'s psum.
+    Factored out of ``make_peel_pass`` so the fused bucket tier can vmap
+    it over a leading tenant axis *inside* one shard_map program — the
+    psum batching rule turns T per-tenant all-reduces into one [T, V]
+    collective without changing any per-tenant integer."""
+    thr = peel_threshold(state.n_e, state.n_v, eps)
+    failed = state.active & (state.deg.astype(jnp.float32) <= thr)
+    delta, removed = _local_delta(failed, state.active, src_l, dst_l,
+                                  n_nodes, axes)
+    active_new = state.active & ~failed
+    deg_new = jnp.where(active_new, state.deg - delta, 0).astype(jnp.int32)
+    n_e_new = state.n_e - removed // 2
+    n_v_new = state.n_v - jnp.sum(failed.astype(jnp.int32))
+    rho_new = jnp.where(
+        n_v_new > 0,
+        n_e_new.astype(jnp.float32) / jnp.maximum(n_v_new, 1), 0.0)
+    better = rho_new > state.best_density
+    return PeelState(
+        deg=deg_new, active=active_new, n_v=n_v_new, n_e=n_e_new,
+        best_density=jnp.where(better, rho_new, state.best_density),
+        best_mask=jnp.where(better, active_new, state.best_mask),
+        passes=state.passes + 1,
+    )
+
+
 def make_peel_pass(mesh, n_nodes: int, eps: float):
     """Returns a jittable (state, src_sharded, dst_sharded) -> state pass."""
     axes = tuple(mesh.axis_names)
 
     def body(state: PeelState, src_l, dst_l) -> PeelState:
-        thr = peel_threshold(state.n_e, state.n_v, eps)
-        failed = state.active & (state.deg.astype(jnp.float32) <= thr)
-        delta, removed = _local_delta(failed, state.active, src_l, dst_l,
-                                      n_nodes, axes)
-        active_new = state.active & ~failed
-        deg_new = jnp.where(active_new, state.deg - delta, 0).astype(jnp.int32)
-        n_e_new = state.n_e - removed // 2
-        n_v_new = state.n_v - jnp.sum(failed.astype(jnp.int32))
-        rho_new = jnp.where(
-            n_v_new > 0,
-            n_e_new.astype(jnp.float32) / jnp.maximum(n_v_new, 1), 0.0)
-        better = rho_new > state.best_density
-        return PeelState(
-            deg=deg_new, active=active_new, n_v=n_v_new, n_e=n_e_new,
-            best_density=jnp.where(better, rho_new, state.best_density),
-            best_mask=jnp.where(better, active_new, state.best_mask),
-            passes=state.passes + 1,
-        )
+        return _peel_pass_body(state, src_l, dst_l, n_nodes, eps, axes)
 
     state_spec = PeelState(deg=P(), active=P(), n_v=P(), n_e=P(),
                            best_density=P(), best_mask=P(), passes=P())
@@ -182,6 +200,67 @@ def make_sharded_warm_peel(mesh, n_nodes: int, eps: float):
             0.0)
         return final, warm_rho
 
+    SHARDED_JITS.append(run)
+    return run
+
+
+def _warm_peel_shard_body(src_l, dst_l, deg, n_edges, prev_mask,
+                          n_nodes, eps, axes):
+    """Per-shard, per-tenant warm peel: the exact recurrence of
+    ``make_sharded_warm_peel.run`` with the shard_map wrapper factored out
+    so the batched variant below can vmap it over a leading tenant axis."""
+    active = deg > 0
+    n_v = jnp.sum(active.astype(jnp.int32))
+    n_e = n_edges.astype(jnp.int32)
+    rho0 = n_e.astype(jnp.float32) / jnp.maximum(n_v, 1).astype(jnp.float32)
+    state = PeelState(
+        deg=deg.astype(jnp.int32), active=active, n_v=n_v, n_e=n_e,
+        best_density=rho0, best_mask=active,
+        passes=jnp.asarray(0, jnp.int32))
+    final = jax.lax.while_loop(
+        lambda s: s.n_v > 0,
+        lambda s: _peel_pass_body(s, src_l, dst_l, n_nodes, eps, axes), state)
+    src_c = jnp.minimum(src_l, n_nodes - 1)
+    dst_c = jnp.minimum(dst_l, n_nodes - 1)
+    valid = (src_l < n_nodes) & (dst_l < n_nodes)
+    live = valid & prev_mask[src_c] & prev_mask[dst_c]
+    warm_e = jax.lax.psum(jnp.sum(live.astype(jnp.int32)), axes) // 2
+    warm_v = jnp.sum(prev_mask.astype(jnp.int32))
+    warm_rho = jnp.where(
+        warm_v > 0, warm_e.astype(jnp.float32) / jnp.maximum(warm_v, 1), 0.0)
+    return final, warm_rho
+
+
+@lru_cache(maxsize=None)
+def make_sharded_batched_warm_peel(mesh, n_nodes: int, eps: float):
+    """The fused+sharded bucket peel: ONE shard_map program whose body
+    vmaps the per-tenant warm peel over the leading tenant axis.
+
+    (src [T, lanes], dst [T, lanes], deg [T, V], n_edges [T],
+    prev_mask [T, V]) -> (stacked PeelState, warm_rho [T]) with the lane
+    axis sharded over the mesh and everything |V|-sized replicated. Inside
+    the body every ``psum`` sees the whole [T, V] delta stack (vmap's
+    batching rule for named-axis collectives), so a bucket of T tenants
+    pays ONE all-reduce per pass where T solo sharded tenants paid T —
+    the collective amortization this tier exists for. Converged lanes are
+    frozen by while_loop batching's select (the `_batched_warm_peel_jit`
+    mechanism), so each tenant's (density, mask, passes) stays
+    bit-identical to its solo run on any device count.
+    """
+    axes = tuple(mesh.axis_names)
+
+    def body(src_l, dst_l, deg, n_edges, prev_mask):
+        return jax.vmap(
+            lambda s, d, g, ne, pm: _warm_peel_shard_body(
+                s, d, g, ne, pm, n_nodes, eps, axes)
+        )(src_l, dst_l, deg, n_edges, prev_mask)
+
+    state_spec = PeelState(deg=P(), active=P(), n_v=P(), n_e=P(),
+                           best_density=P(), best_mask=P(), passes=P())
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P(), P()),
+        out_specs=(state_spec, P()), check_vma=False))
     SHARDED_JITS.append(run)
     return run
 
@@ -284,13 +363,14 @@ def _make_cbds_run(mesh, n_nodes: int, rounds: int):
         inter_cross = jax.lax.psum(
             jnp.sum(legit_pair.astype(jnp.int32)), axes) // 2
         member_new = member | legit
-        return (member_new, m_v + jnp.sum(legit.astype(jnp.int32)),
-                m_e + inter_into + inter_cross)
+        n_add = jnp.sum(legit.astype(jnp.int32))
+        return (member_new, m_v + n_add,
+                m_e + inter_into + inter_cross, n_add)
 
     augment = shard_map_compat(
         augment_body, mesh=mesh,
         in_specs=(P(), P(), P(), P(axes), P(axes)),
-        out_specs=(P(), P(), P()), check_vma=False)
+        out_specs=(P(), P(), P(), P()), check_vma=False)
 
     @jax.jit
     def run(src, dst, n_edges):
@@ -334,10 +414,13 @@ def _make_cbds_run(mesh, n_nodes: int, rounds: int):
         core = jax.lax.while_loop(outer_cond, outer, s0)
         member = core.coreness >= core.best_k
         m_v, m_e = core.best_n_v, core.best_n_e
+        n_legit = jnp.asarray(0, jnp.int32)
         for _ in range(rounds):
-            member, m_v, m_e = augment(member, m_v, m_e, src, dst)
+            member, m_v, m_e, n_add = augment(member, m_v, m_e, src, dst)
+            n_legit = n_legit + n_add
         density = m_e.astype(jnp.float32) / jnp.maximum(m_v, 1)
-        return core, member, jnp.maximum(density, core.best_density)
+        return (core, member, jnp.maximum(density, core.best_density),
+                n_legit)
 
     SHARDED_JITS.append(run)
     return run
@@ -347,19 +430,21 @@ def cbds_distributed(graph: Graph, mesh, rounds: int = 1) -> dict:
     """Multi-device CBDS-P (phases 1+2). Matches core.cbds (tested)."""
     src, dst = shard_edges(graph, mesh)
     run = _make_cbds_run(mesh, graph.n_nodes, rounds)
-    core, member, density = run(src, dst,
-                                jnp.asarray(graph.n_edges, jnp.int32))
+    core, member, density, n_legit = run(
+        src, dst, jnp.asarray(graph.n_edges, jnp.int32))
     return {
         "density": float(density),
         "core_density": float(core.best_density),
         "k_star": int(core.best_k),
         "member_mask": np.asarray(member),
         "coreness": np.asarray(core.coreness),
+        "n_legit": int(n_legit),
     }
 
 
-__all__ = ["edge_sharding", "replicated_sharding", "shard_edges",
-           "make_peel_pass", "make_sharded_warm_peel", "mesh_device_count",
+__all__ = ["edge_sharding", "stacked_edge_sharding", "replicated_sharding",
+           "shard_edges", "make_peel_pass", "make_sharded_warm_peel",
+           "make_sharded_batched_warm_peel", "mesh_device_count",
            "flat_shard_index", "validate_stream_mesh", "SHARDED_JITS",
            "pbahmani_distributed", "cbds_distributed", "DistCoreState",
            "make_kcore_level"]

@@ -75,8 +75,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.density import degrees_from_coo, subgraph_density
 from repro.core.dispatch import assert_exact_envelope, resolve_kernel
 from repro.core.distributed import (
-    DistCoreState, SHARDED_JITS, edge_sharding, make_kcore_level,
-    make_peel_pass, mesh_device_count,
+    DistCoreState, SHARDED_JITS, _peel_pass_body, edge_sharding,
+    make_kcore_level, make_peel_pass, mesh_device_count,
 )
 from repro.core.kcore import CoreState, _level_fixpoint
 from repro.core.pbahmani import PeelState, pbahmani_pass
@@ -634,6 +634,92 @@ def _make_sharded_bucket_peel(mesh, eps: float, bucket_v: int, bucket_e: int,
         best_mask = jnp.where(improved, mask_back, s1.best_mask)
         return s2.best_density, best_mask, s2.passes
 
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_batched_bucket_peel(mesh, eps: float, bucket_v: int,
+                                      bucket_e: int, bucket_v2: int,
+                                      bucket_e2: int):
+    """Fused+sharded bucket peel: the whole per-tenant sequence of
+    ``_make_sharded_bucket_peel`` (degree histogram, first-level peel,
+    per-shard ladder compact, second-level peel, strict-``>`` merge back)
+    vmapped over a leading tenant axis inside ONE shard_map program, so a
+    same-bucket group of T tenants pays one psum per pass instead of T.
+    Each tenant's triple is bit-identical to ``_bucket_peel_jit`` on its
+    row (the single-tenant sharded docstring's order-invariance argument,
+    plus while_loop batching's select-freeze for converged tenants)."""
+    axes = tuple(mesh.axis_names)
+    n_dev = mesh_device_count(mesh)
+    if bucket_e % n_dev:
+        raise ValueError(
+            f"bucket_e={bucket_e} not divisible by {n_dev} devices")
+
+    def tenant(b_src_l, b_dst_l, n_v, n_e, best_density, passes):
+        d = jax.ops.segment_sum(
+            jnp.ones_like(b_src_l, jnp.int32), jnp.minimum(b_src_l, bucket_v),
+            num_segments=bucket_v + 1)[:bucket_v]
+        b_deg = jax.lax.psum(d, axes)
+        b_active = jnp.arange(bucket_v, dtype=jnp.int32) < n_v
+        state = PeelState(
+            deg=b_deg,
+            active=b_active,
+            n_v=n_v.astype(jnp.int32),
+            n_e=n_e.astype(jnp.int32),
+            best_density=best_density.astype(jnp.float32),
+            best_mask=jnp.zeros(bucket_v, dtype=bool),
+            passes=passes.astype(jnp.int32),
+        )
+
+        def unfits(s: PeelState) -> jax.Array:
+            return (s.n_v > 0) & ((s.n_v > bucket_v2) | (2 * s.n_e > bucket_e2))
+
+        s1 = jax.lax.while_loop(
+            unfits,
+            lambda s: _peel_pass_body(s, b_src_l, b_dst_l, bucket_v, eps,
+                                      axes),
+            state)
+        # per-shard ladder compact (compact_body of the single-tenant run)
+        src_c = jnp.minimum(b_src_l, bucket_v - 1)
+        dst_c = jnp.minimum(b_dst_l, bucket_v - 1)
+        valid = (b_src_l < bucket_v) & (b_dst_l < bucket_v)
+        live = valid & s1.active[src_c] & s1.active[dst_c]
+        perm = jnp.cumsum(s1.active.astype(jnp.int32)) - 1
+        pos = jnp.where(live, jnp.cumsum(live.astype(jnp.int32)) - 1,
+                        bucket_e2)
+        b2_src = jnp.full(bucket_e2, bucket_v2, jnp.int32).at[pos].set(
+            perm[src_c].astype(jnp.int32), mode="drop")
+        b2_dst = jnp.full(bucket_e2, bucket_v2, jnp.int32).at[pos].set(
+            perm[dst_c].astype(jnp.int32), mode="drop")
+        vslot = jnp.where(s1.active, perm, bucket_v2)
+        b_deg2 = jnp.zeros(bucket_v2, jnp.int32).at[vslot].set(
+            s1.deg, mode="drop")
+        b_act2 = jnp.zeros(bucket_v2, bool).at[vslot].set(True, mode="drop")
+        s2 = jax.lax.while_loop(
+            lambda s: s.n_v > 0,
+            lambda s: _peel_pass_body(s, b2_src, b2_dst, bucket_v2, eps,
+                                      axes),
+            PeelState(
+                deg=b_deg2, active=b_act2, n_v=s1.n_v, n_e=s1.n_e,
+                best_density=s1.best_density,
+                best_mask=jnp.zeros(bucket_v2, dtype=bool),
+                passes=s1.passes))
+        improved = s2.best_density > s1.best_density
+        mask_back = s1.active & s2.best_mask[jnp.minimum(perm, bucket_v2 - 1)]
+        best_mask = jnp.where(improved, mask_back, s1.best_mask)
+        return s2.best_density, best_mask, s2.passes
+
+    def body(b_src_l, b_dst_l, n_v, n_e, best_density, passes):
+        # every per-tenant output crosses the psums inside ``tenant``
+        return jax.vmap(
+            lambda s, d, v, e, bd, p: tenant(s, d, v, e, bd, p)
+        )(b_src_l, b_dst_l, n_v, n_e, best_density, passes)
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P(), P(), P()),
+        out_specs=(P(), P(), P()), check_vma=False))
     SHARDED_JITS.append(run)
     return run
 

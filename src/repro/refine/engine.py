@@ -77,6 +77,7 @@ def refine_resident(
     src, dst, deg, n_edges: int, n_nodes: int, eps: float,
     seed_ne: int, seed_nv: int, seed_mask: np.ndarray, seed_passes: int,
     target_gap: float, max_rounds: int, kernel: bool = False,
+    mesh=None,
 ) -> tuple[GapCertificate, np.ndarray, int, int, list]:
     """Run refinement rounds off device-resident COO arrays.
 
@@ -88,9 +89,24 @@ def refine_resident(
     floored at 1: a certificate needs at least one load round for its dual
     side. ``kernel`` selects the Pallas segment-sum tier for the round's
     reductions (the caller supplies dst-sorted lanes for its band-skip
-    envelope); certificates are bit-identical either way.
+    envelope); certificates are bit-identical either way. ``mesh`` routes
+    each round through the shard_map tier instead — ``src/dst`` are then
+    the engine's resident mesh-sharded slot arrays (no re-upload), and the
+    round integers are identical on any device count.
     """
     max_rounds = max(int(max_rounds), 1)
+    if mesh is not None:
+        from repro.refine.loads import _make_sharded_refine_round
+
+        sharded_round = _make_sharded_refine_round(mesh, n_nodes, float(eps))
+
+        def step(src, dst, deg, n_edges, loads, bd, be, bv, bm, ps):
+            return sharded_round(src, dst, deg, n_edges, loads, bd, be, bv,
+                                 bm, ps)
+    else:
+        def step(src, dst, deg, n_edges, loads, bd, be, bv, bm, ps):
+            return _refine_round_jit(src, dst, deg, n_edges, loads, bd, be,
+                                     bv, bm, ps, n_nodes, eps, kernel)
     loads = jnp.zeros(n_nodes, jnp.int32)
     seed_density = (np.float32(seed_ne) / np.float32(seed_nv)
                     if seed_nv > 0 else np.float32(0.0))
@@ -107,9 +123,9 @@ def refine_resident(
     rounds = 0
     for t in range(1, int(max_rounds) + 1):
         (loads, best_density, best_ne, best_nv, best_mask,
-         passes) = _refine_round_jit(
+         passes) = step(
             src, dst, deg, n_edges, loads, best_density, best_ne, best_nv,
-            best_mask, passes, n_nodes, eps, kernel)
+            best_mask, passes)
         rounds = t
         # host guard: the device best-tracking compares f32 densities; fold
         # the seed back in exactly so refined >= seed always holds

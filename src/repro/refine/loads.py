@@ -46,13 +46,16 @@ makes termination robust to float32 rounding of billion-scale load sums.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.dispatch import peel_delta
+from repro.core.distributed import SHARDED_JITS
+from repro.utils.compat import shard_map_compat
 
 
 class RefinePeelState(NamedTuple):
@@ -223,6 +226,131 @@ def _batched_refine_round_jit(src, dst, deg, n_edges, loads, best_density,
 
 
 # ---------------------------------------------------------------------------
+# sharded variant — refinement rounds over mesh-partitioned edge lanes
+# ---------------------------------------------------------------------------
+def _sharded_refine_pass(state: RefinePeelState, src_l, dst_l, n_nodes: int,
+                         eps: float, axes) -> RefinePeelState:
+    """``refine_pass`` as seen by one shard: both ``peel_delta`` reductions
+    become per-shard segment-sums followed by one psum each (exact int32 —
+    the mirror-identity charging argument is order-invariant, so the
+    trajectory is bit-identical to the single-device pass), and the
+    removed-edge count is psum'd the same way. vmappable over a leading
+    tenant axis inside a shard_map body, like ``_peel_pass_body``."""
+    key = (state.loads + state.deg).astype(jnp.float32)
+    thr = refine_threshold(state.load_sum, state.n_e, state.n_v, eps)
+    min_key = jnp.min(jnp.where(state.active, key, jnp.inf))
+    failed = state.active & ((key <= thr) | (key <= min_key))
+
+    src_c = jnp.minimum(src_l, n_nodes - 1)
+    dst_c = jnp.minimum(dst_l, n_nodes - 1)
+    valid = (src_l < n_nodes) & (dst_l < n_nodes)
+    live_edge = valid & state.active[src_c] & state.active[dst_c]
+    fail_s = failed[src_c] & live_edge
+    fail_d = failed[dst_c] & live_edge
+
+    delta_to_dst = jax.lax.psum(jax.ops.segment_sum(
+        fail_s.astype(jnp.int32), jnp.minimum(dst_l, n_nodes),
+        num_segments=n_nodes + 1)[:n_nodes], axes)
+    assign_d = fail_d & (~fail_s | (dst_c < src_c))
+    inc = jax.lax.psum(jax.ops.segment_sum(
+        assign_d.astype(jnp.int32), jnp.minimum(dst_l, n_nodes),
+        num_segments=n_nodes + 1)[:n_nodes], axes)
+
+    removed_directed = jax.lax.psum(
+        jnp.sum((fail_s | fail_d).astype(jnp.int32)), axes)
+    n_e_new = state.n_e - removed_directed // 2
+    active_new = state.active & ~failed
+    deg_new = jnp.where(active_new, state.deg - delta_to_dst, 0).astype(
+        jnp.int32)
+    n_v_new = state.n_v - jnp.sum(failed.astype(jnp.int32))
+    loads_new = (state.loads + inc).astype(jnp.int32)
+    load_sum_new = state.load_sum - jnp.sum(
+        jnp.where(failed, state.loads, 0))
+
+    best_density, best_ne, best_nv, best_mask = _fold_best(
+        state, n_e_new, n_v_new, active_new)
+    return RefinePeelState(
+        deg=deg_new, loads=loads_new, active=active_new, n_v=n_v_new,
+        n_e=n_e_new, load_sum=load_sum_new, best_density=best_density,
+        best_ne=best_ne, best_nv=best_nv, best_mask=best_mask,
+        passes=state.passes + 1,
+    )
+
+
+def _sharded_refine_round_body(src_l, dst_l, deg, n_edges, loads,
+                               best_density, best_ne, best_nv, best_mask,
+                               passes, n_nodes: int, eps: float, axes):
+    """Per-shard ``refine_round_body``: same init from the maintained degree
+    array, while_loop of the sharded pass."""
+    active = deg > 0
+    n_v = jnp.sum(active.astype(jnp.int32))
+    state = RefinePeelState(
+        deg=deg.astype(jnp.int32),
+        loads=loads.astype(jnp.int32),
+        active=active,
+        n_v=n_v,
+        n_e=n_edges.astype(jnp.int32),
+        load_sum=jnp.sum(jnp.where(active, loads, 0)).astype(jnp.int32),
+        best_density=best_density.astype(jnp.float32),
+        best_ne=best_ne.astype(jnp.int32),
+        best_nv=best_nv.astype(jnp.int32),
+        best_mask=best_mask,
+        passes=passes.astype(jnp.int32),
+    )
+    final = jax.lax.while_loop(
+        lambda s: s.n_v > 0,
+        lambda s: _sharded_refine_pass(s, src_l, dst_l, n_nodes, eps, axes),
+        state,
+    )
+    return (final.loads, final.best_density, final.best_ne, final.best_nv,
+            final.best_mask, final.passes)
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_refine_round(mesh, n_nodes: int, eps: float):
+    """Cached jitted sharded analog of ``_refine_round_jit``: refinement
+    rounds run directly on the engine's resident sharded slot arrays (the
+    ISSUE 9 bugfix — no more single-device re-upload per refined query).
+    Same signature as the single-device round minus the statics."""
+    axes = tuple(mesh.axis_names)
+
+    def body(src_l, dst_l, deg, n_edges, loads, bd, be, bv, bm, ps):
+        return _sharded_refine_round_body(
+            src_l, dst_l, deg, n_edges, loads, bd, be, bv, bm, ps,
+            n_nodes, eps, axes)
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(axes), P(axes)) + (P(),) * 8,
+        out_specs=(P(),) * 6, check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_batched_refine_round(mesh, n_nodes: int, eps: float):
+    """Fused+sharded refinement round: the per-tenant sharded round vmapped
+    over the leading tenant axis inside ONE shard_map program — a bucket's
+    refinement rounds pay one psum per pass for the whole group (the
+    ``_batched_refine_round_jit`` of the sharded tier)."""
+    axes = tuple(mesh.axis_names)
+
+    def body(src_l, dst_l, deg, n_edges, loads, bd, be, bv, bm, ps):
+        return jax.vmap(
+            lambda s, d, g, ne, lo, b1, b2, b3, b4, p:
+            _sharded_refine_round_body(
+                s, d, g, ne, lo, b1, b2, b3, b4, p, n_nodes, eps, axes)
+        )(src_l, dst_l, deg, n_edges, loads, bd, be, bv, bm, ps)
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes)) + (P(),) * 8,
+        out_specs=(P(),) * 6, check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+# ---------------------------------------------------------------------------
 # dense (GEMV) variant — the fused small-tenant fast path
 # ---------------------------------------------------------------------------
 def _dense_refine_pass(state: RefinePeelState, adj: jax.Array,
@@ -323,5 +451,7 @@ __all__ = [
     "_refine_round_jit",
     "_batched_refine_round_jit",
     "_batched_dense_refine_round_jit",
+    "_make_sharded_refine_round",
+    "_make_sharded_batched_refine_round",
     "REFINE_JITS",
 ]

@@ -77,7 +77,7 @@ from repro.core.cbds import _cbds_jit
 from repro.core.density import induced_edge_count
 from repro.core.dispatch import assert_exact_envelope, resolve_kernel
 from repro.core.distributed import (
-    SHARDED_JITS, flat_shard_index, make_sharded_warm_peel,
+    SHARDED_JITS, _make_cbds_run, flat_shard_index, make_sharded_warm_peel,
     mesh_device_count, validate_stream_mesh,
 )
 from repro.core.pbahmani import PeelState, _pbahmani_jit, pbahmani_pass
@@ -216,6 +216,156 @@ def _make_sharded_apply(mesh, n_nodes: int):
         body, mesh=mesh,
         in_specs=(P(axes), P(axes), P(), P(), P(), P(), P(), P(), P()),
         out_specs=(P(axes), P(axes), P()), check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_batched_apply(mesh, n_nodes: int):
+    """Fused+sharded ingest (ISSUE 9): the per-tenant scatter + signed
+    degree histogram of ``_make_sharded_apply`` vmapped over a leading
+    tenant axis inside ONE shard_map program — slot stacks [T, lanes] with
+    the lane axis sharded, batch rows [T, B] replicated. The T per-tenant
+    degree psums batch into one [T, V] all-reduce; each tenant's device
+    state stays bit-identical to its solo sharded engine (exact int32
+    histogram, identical scatter translation per lane block)."""
+    axes = tuple(mesh.axis_names)
+    n_dev = mesh_device_count(mesh)
+
+    def body(src_l, dst_l, deg, slots, su, sv, du, dv, w):
+        lanes = src_l.shape[1]          # 2*capacity // n_dev
+        me = flat_shard_index(mesh)
+        base = me * lanes
+        cap = (lanes * n_dev) // 2
+        b_local = w.shape[1] // n_dev
+        start = (me * b_local).astype(jnp.int32)
+
+        def one(src_t, dst_t, deg_t, slots_t, su_t, sv_t, du_t, dv_t, w_t):
+            p1 = slots_t - base
+            p2 = slots_t + cap - base
+            p1 = jnp.where((p1 >= 0) & (p1 < lanes), p1, lanes)
+            p2 = jnp.where((p2 >= 0) & (p2 < lanes), p2, lanes)
+            src_t = src_t.at[p1].set(su_t, mode="drop").at[p2].set(
+                sv_t, mode="drop")
+            dst_t = dst_t.at[p1].set(sv_t, mode="drop").at[p2].set(
+                su_t, mode="drop")
+            w_l = jax.lax.dynamic_slice(w_t, (start,), (b_local,))
+            du_l = jax.lax.dynamic_slice(du_t, (start,), (b_local,))
+            dv_l = jax.lax.dynamic_slice(dv_t, (start,), (b_local,))
+            d_u = jax.ops.segment_sum(
+                w_l, jnp.minimum(du_l, n_nodes), num_segments=n_nodes + 1)
+            d_v = jax.ops.segment_sum(
+                w_l, jnp.minimum(dv_l, n_nodes), num_segments=n_nodes + 1)
+            d = jax.lax.psum(d_u[:n_nodes] + d_v[:n_nodes], axes)
+            return src_t, dst_t, (deg_t + d).astype(jnp.int32)
+
+        return jax.vmap(one)(src_l, dst_l, deg, slots, su, sv, du, dv, w)
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P(), P(), P(), P(),
+                  P(), P()),
+        out_specs=(P(None, axes), P(None, axes), P()), check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+# -- laundered stack ops for the fused+sharded TenantBatch -------------------
+# Persistent [T, ...] bucket stacks mix with shard_map outputs on the hot
+# path, so every mutation goes through a cached shard_map'd jit whose output
+# shardings match the batched entry points above (the _make_sharded_resync
+# laundering rationale, lifted to stacks). All appended to SHARDED_JITS.
+@lru_cache(maxsize=None)
+def _make_sharded_stack_sync(mesh):
+    """Identity placement for (src, dst, deg, prev_mask) stacks — the
+    alloc/grow upload path of a sharded TenantBatch."""
+    axes = tuple(mesh.axis_names)
+    run = jax.jit(shard_map_compat(
+        lambda s, d, g, m: (s, d, g, m), mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P()),
+        out_specs=(P(None, axes), P(None, axes), P(), P()),
+        check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_lane_write(mesh):
+    """Swap one tenant's (row_src, row_dst, row_deg, row_mask) into lane
+    ``lane`` of the stacks (traced lane index: joins/evictions at any lane
+    reuse one executable)."""
+    axes = tuple(mesh.axis_names)
+
+    def body(src, dst, deg, mask, lane, r_src, r_dst, r_deg, r_mask):
+        return (src.at[lane].set(r_src), dst.at[lane].set(r_dst),
+                deg.at[lane].set(r_deg), mask.at[lane].set(r_mask))
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P(), P(),
+                  P(axes), P(axes), P(), P()),
+        out_specs=(P(None, axes), P(None, axes), P(), P()),
+        check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_lane_gather(mesh):
+    """Gather a pow-2 group of lanes as stacked (src, dst, deg, mask) —
+    the peel-group input of ``make_sharded_batched_warm_peel``."""
+    axes = tuple(mesh.axis_names)
+
+    def body(src, dst, deg, mask, lanes):
+        return src[lanes], dst[lanes], deg[lanes], mask[lanes]
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P(), P()),
+        out_specs=(P(None, axes), P(None, axes), P(), P()),
+        check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_row_view(mesh):
+    """Gather ONE lane with exactly the output shardings of
+    ``_make_sharded_resync`` — what ``FusedEngine._sync_views`` hands the
+    inherited solo entry points (plan rebuild, pruned prepare, cbds), so
+    those stay one executable across solo and fused placement."""
+    axes = tuple(mesh.axis_names)
+
+    def body(src, dst, deg, mask, lane):
+        return src[lane], dst[lane], deg[lane], mask[lane]
+
+    run = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(), P(), P()),
+        out_specs=(P(axes), P(axes), P(), P()), check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_mask_rows_write(mesh):
+    """Scatter per-tenant result masks back into the replicated prev-mask
+    stack (OOB pad lanes drop, as in ``_mask_rows_write_jit``)."""
+    run = jax.jit(shard_map_compat(
+        lambda ms, lanes, masks: ms.at[lanes].set(masks, mode="drop"),
+        mesh=mesh, in_specs=(P(), P(), P()), out_specs=P(),
+        check_vma=False))
+    SHARDED_JITS.append(run)
+    return run
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_deg_rows_gather(mesh):
+    """Gather degree rows for a group of lanes (replicated stack — the
+    pruned-flush host prepare reads degrees per member)."""
+    run = jax.jit(shard_map_compat(
+        lambda stack, lanes: stack[lanes], mesh=mesh,
+        in_specs=(P(), P()), out_specs=P(), check_vma=False))
     SHARDED_JITS.append(run)
     return run
 
@@ -951,13 +1101,11 @@ class DeltaEngine:
         return res
 
     def _refine_arrays(self):
-        """(src, dst, deg) device arrays the refinement rounds consume.
-        Sharded engines re-upload single-device (the cbds precedent: a
-        non-shard_map jit over sharded operands would silently all-gather;
-        a sharded refine round is a ROADMAP follow-up)."""
-        if self.mesh is not None:
-            src, dst, deg = self.buffer.resident_state(self.node_capacity)
-            return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(deg)
+        """(src, dst, deg) device arrays the refinement rounds consume —
+        the resident state in every mode. Sharded engines hand their
+        mesh-sharded slot arrays straight to the shard_map refine round
+        (``refine_resident(mesh=...)``), closing the ISSUE 9 re-upload
+        residual: no O(|E|) host round-trip per refined query."""
         return self._src, self._dst, self._deg
 
     def _query_refined(self, target_gap: float | None,
@@ -982,7 +1130,7 @@ class DeltaEngine:
             cert, mask_full, passes, rounds, _ = refine_resident(
                 src, dst, deg, self.buffer.n_edges, self.node_capacity,
                 self.eps, seed_ne, seed_nv, seed_mask, q.passes, tg,
-                max_rounds, self.kernel)
+                max_rounds, self.kernel, mesh=self.mesh)
             self._refine_cert = cert
             self._cert_mask = mask_full.copy()
             self._cert_insert_slack = 0
@@ -1015,23 +1163,29 @@ class DeltaEngine:
         return self.query().density
 
     def cbds(self, rounds: int = 1) -> dict:
-        """CBDS-P on the current graph through the existing ``_cbds_jit``.
-        Sharded engines dispatch a fresh single-device upload — CBDS is an
-        off-hot-path diagnostic, and routing the resident sharded arrays
-        through a non-shard_map jit would silently all-gather anyway."""
+        """CBDS-P on the current graph. Sharded engines route through the
+        ``core/distributed`` shard_map tier directly on the resident
+        mesh-sharded slot arrays (the ISSUE 9 bugfix — the old path paid a
+        fresh single-device upload per call); the dict is identical to the
+        single-device ``_cbds_jit`` on the same graph (tested)."""
         if self._generation < 0:
             self._resync_device()
         if self.mesh is not None:
-            src, dst = self.buffer.device_view()
-            res = _cbds_jit(
-                jnp.asarray(src), jnp.asarray(dst), self.node_capacity,
-                jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
-            )
-        else:
-            res = _cbds_jit(
-                self._src, self._dst, self.node_capacity,
-                jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
-            )
+            core, member, density, n_legit = _make_cbds_run(
+                self.mesh, self.node_capacity, int(rounds))(
+                self._src, self._dst,
+                jnp.asarray(self.buffer.n_edges, jnp.int32))
+            return {
+                "density": float(density),
+                "core_density": float(core.best_density),
+                "k_star": int(core.best_k),
+                "member_mask": np.asarray(member)[: self.n_nodes],
+                "n_legit": int(n_legit),
+            }
+        res = _cbds_jit(
+            self._src, self._dst, self.node_capacity,
+            jnp.asarray(self.buffer.n_edges, jnp.int32), int(rounds),
+        )
         return {
             "density": float(res.density),
             "core_density": float(res.core_density),

@@ -41,9 +41,17 @@ whose passes bound is the max over members — the aggregate-throughput win
 measured in benchmarks/bench_tenants.py (>=3x at 16 small tenants vs
 sequential dispatch).
 
-Sharded tenants are not fusable yet (vmap inside the shard_map pass bodies
-is a different contract); the registry rejects the combination. See the
-ROADMAP follow-up.
+Sharded tenants fuse too (ISSUE 9): a bucket whose tenants are mesh-sharded
+keeps its slot stacks as ``[T, lanes]`` arrays with the *lane* axis sharded
+over the mesh (``stacked_edge_sharding``) and vmaps the per-shard pass
+bodies *inside* one shard_map program (``make_sharded_batched_warm_peel``,
+``_make_sharded_batched_apply``, ``_make_sharded_batched_bucket_peel``,
+``_make_sharded_batched_refine_round``). Named-axis collectives commute
+with ``vmap`` — the batching rule all-reduces the whole ``[T, V]`` delta
+stack at once — so T sharded tenants pay ONE ``psum`` per pass where solo
+sharded engines paid T; per-tenant triples stay bit-identical to the solo
+single-device engine on any device count. The mesh is part of the pool's
+bucket key, so differently-sharded tenants never share a stack.
 """
 from __future__ import annotations
 
@@ -57,9 +65,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.density import peel_threshold
+from repro.core.distributed import (
+    make_sharded_batched_warm_peel, mesh_device_count,
+)
 from repro.core.pbahmani import PeelState
 from repro.core.prune import (
-    _batched_bucket_peel_jit, merge_pruned_peel, prepare_pruned_peel,
+    _batched_bucket_peel_jit, _make_sharded_batched_bucket_peel,
+    merge_pruned_peel, prepare_pruned_peel,
 )
 from repro.obs.audit import AUDITOR
 from repro.obs.trace import get_tracer, span
@@ -69,11 +81,15 @@ from repro.refine.certify import (
 from repro.refine.engine import DEFAULT_TARGET_GAP
 from repro.refine.loads import (
     _batched_dense_refine_round_jit, _batched_refine_round_jit,
+    _make_sharded_batched_refine_round,
 )
 from repro.stream.buffer import MIN_CAPACITY, next_pow2
 from repro.stream.delta import (
     DeltaEngine, QueryResult, _apply_batch_body, _batched_apply_jit,
-    _batched_warm_peel_jit, MIN_BATCH,
+    _batched_warm_peel_jit, _make_sharded_batched_apply,
+    _make_sharded_deg_rows_gather, _make_sharded_lane_gather,
+    _make_sharded_lane_write, _make_sharded_mask_rows_write,
+    _make_sharded_row_view, _make_sharded_stack_sync, MIN_BATCH,
 )
 
 MIN_LANES = 4  # smallest lane stack; doubles when a bucket fills
@@ -234,18 +250,26 @@ class TenantBatch:
     recomputes its bands from the data each call, so results stay
     bit-identical — only the band-skip win is smaller than the unbatched
     engine's sorted path. The flag is part of the pool's bucket key, since
-    it is a static argument of every batched program."""
+    it is a static argument of every batched program.
+
+    ``mesh`` makes the stack *sharded*: the slot arrays' lane axis is
+    distributed over the mesh and every batched program runs
+    vmap-inside-shard_map, paying one collective per pass for the whole
+    bucket. The dense [T, V, V] tier is replicated-only and stays off for
+    sharded buckets (its GEMV passes have no sharded analogue here)."""
 
     def __init__(self, node_capacity: int, edge_capacity: int, eps: float,
-                 lanes: int = MIN_LANES, kernel: bool = False):
+                 lanes: int = MIN_LANES, kernel: bool = False, mesh=None):
         self.node_capacity = int(node_capacity)
         self.edge_capacity = int(edge_capacity)
         self.eps = float(eps)
         self.kernel = bool(kernel)
+        self.mesh = mesh
+        self.sharded = mesh is not None
         self.lanes = max(next_pow2(lanes), MIN_LANES)
         # small vertex spaces additionally keep the dense adjacency stack
         # and peel through batched GEMVs (see DENSE_NODE_CAP)
-        self.dense = self.node_capacity <= DENSE_NODE_CAP
+        self.dense = self.node_capacity <= DENSE_NODE_CAP and mesh is None
         self.lane_of: dict[str, int] = {}
         self._free = list(range(self.lanes - 1, -1, -1))
         self.lane_generation: dict[int, int] = {}
@@ -257,8 +281,30 @@ class TenantBatch:
         self.n_group_peels = 0  # fused query flushes
         self._alloc(self.lanes)
 
+    @property
+    def n_shards(self) -> int:
+        return mesh_device_count(self.mesh) if self.sharded else 1
+
+    def _commit_stacks(self, src, dst, deg, mask) -> None:
+        """Round-trip host stacks through the identity shard_map program so
+        every resident sharded array carries the committed stacked sharding
+        the batched entry points expect (the ``_make_sharded_resync``
+        laundering convention, lifted to lane stacks)."""
+        self._src, self._dst, self._deg, self._prev_mask = (
+            _make_sharded_stack_sync(self.mesh)(
+                jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+                jnp.asarray(deg, jnp.int32), jnp.asarray(mask, dtype=bool)))
+
     def _alloc(self, lanes: int) -> None:
         sent = self.node_capacity
+        if self.sharded:
+            self._commit_stacks(
+                np.full((lanes, 2 * self.edge_capacity), sent, np.int32),
+                np.full((lanes, 2 * self.edge_capacity), sent, np.int32),
+                np.zeros((lanes, self.node_capacity), np.int32),
+                np.zeros((lanes, self.node_capacity), bool))
+            self._adj = None
+            return
         self._src = jnp.full((lanes, 2 * self.edge_capacity), sent, jnp.int32)
         self._dst = jnp.full((lanes, 2 * self.edge_capacity), sent, jnp.int32)
         self._deg = jnp.zeros((lanes, self.node_capacity), jnp.int32)
@@ -275,13 +321,26 @@ class TenantBatch:
         deg, mask = np.asarray(self._deg), np.asarray(self._prev_mask)
         adj = np.asarray(self._adj) if self.dense else None
         self.lanes = old * 2
-        self._alloc(self.lanes)
-        self._src = self._src.at[:old].set(src)
-        self._dst = self._dst.at[:old].set(dst)
-        self._deg = self._deg.at[:old].set(deg)
-        self._prev_mask = self._prev_mask.at[:old].set(mask)
-        if self.dense:
-            self._adj = self._adj.at[:old].set(adj)
+        if self.sharded:
+            # prefix-copy on host, then one laundering upload of the
+            # doubled stacks (a grow is a compile event either way)
+            sent = self.node_capacity
+            ns = np.full((self.lanes, 2 * self.edge_capacity), sent,
+                         np.int32)
+            nd = np.full((self.lanes, 2 * self.edge_capacity), sent,
+                         np.int32)
+            ng = np.zeros((self.lanes, self.node_capacity), np.int32)
+            nm = np.zeros((self.lanes, self.node_capacity), bool)
+            ns[:old], nd[:old], ng[:old], nm[:old] = src, dst, deg, mask
+            self._commit_stacks(ns, nd, ng, nm)
+        else:
+            self._alloc(self.lanes)
+            self._src = self._src.at[:old].set(src)
+            self._dst = self._dst.at[:old].set(dst)
+            self._deg = self._deg.at[:old].set(deg)
+            self._prev_mask = self._prev_mask.at[:old].set(mask)
+            if self.dense:
+                self._adj = self._adj.at[:old].set(adj)
         self._free = list(range(self.lanes - 1, old - 1, -1)) + self._free
 
     # -- membership ---------------------------------------------------------
@@ -310,7 +369,9 @@ class TenantBatch:
 
     def write_lane(self, lane: int, src, dst, deg, mask,
                    generation: int) -> None:
-        self._src, self._dst, self._deg, self._prev_mask = _lane_write_jit(
+        write = (_make_sharded_lane_write(self.mesh) if self.sharded
+                 else _lane_write_jit)
+        self._src, self._dst, self._deg, self._prev_mask = write(
             self._src, self._dst, self._deg, self._prev_mask,
             jnp.asarray(lane, jnp.int32), jnp.asarray(src, jnp.int32),
             jnp.asarray(dst, jnp.int32), jnp.asarray(deg, jnp.int32),
@@ -336,7 +397,9 @@ class TenantBatch:
         li[:k] = lanes
         mm = np.zeros((self.lanes, self.node_capacity), bool)
         mm[:k] = masks
-        self._prev_mask = _mask_rows_write_jit(
+        write = (_make_sharded_mask_rows_write(self.mesh) if self.sharded
+                 else _mask_rows_write_jit)
+        self._prev_mask = write(
             self._prev_mask, jnp.asarray(li), jnp.asarray(mm))
 
     # -- fused programs -----------------------------------------------------
@@ -368,6 +431,10 @@ class TenantBatch:
                 _batched_apply_dense_jit(
                     self._src, self._dst, self._deg, self._adj, *args,
                     self.node_capacity))
+        elif self.sharded:
+            self._src, self._dst, self._deg = _make_sharded_batched_apply(
+                self.mesh, self.node_capacity)(
+                    self._src, self._dst, self._deg, *args)
         else:
             self._src, self._dst, self._deg = _batched_apply_jit(
                 self._src, self._dst, self._deg, *args, self.node_capacity)
@@ -385,15 +452,28 @@ class TenantBatch:
         li[:g] = lanes
         ne = np.full(gp, int(n_edges[0]), np.int32)
         ne[:g] = n_edges
-        src_g, dst_g, deg_g, mask_g = _lane_gather_jit(
+        gather = (_make_sharded_lane_gather(self.mesh) if self.sharded
+                  else _lane_gather_jit)
+        src_g, dst_g, deg_g, mask_g = gather(
             self._src, self._dst, self._deg, self._prev_mask, jnp.asarray(li))
         if self.dense:
             adj_g = _rows_gather_jit(self._adj, jnp.asarray(li))
             return _batched_dense_warm_peel_jit(
                 adj_g, deg_g, jnp.asarray(ne), mask_g, self.eps)
+        if self.sharded:
+            return make_sharded_batched_warm_peel(
+                self.mesh, self.node_capacity, self.eps)(
+                    src_g, dst_g, deg_g, jnp.asarray(ne), mask_g)
         return _batched_warm_peel_jit(
             src_g, dst_g, deg_g, jnp.asarray(ne), mask_g,
             self.node_capacity, self.eps, self.kernel)
+
+    def gather_deg_rows(self, lanes) -> jax.Array:
+        """Degree rows for a pow-2 group of lanes (the pruned host prepare
+        reads these per member)."""
+        gather = (_make_sharded_deg_rows_gather(self.mesh) if self.sharded
+                  else _rows_gather_jit)
+        return gather(self._deg, jnp.asarray(lanes))
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"TenantBatch(|V|={self.node_capacity}, "
@@ -402,21 +482,26 @@ class TenantBatch:
 
 
 class FusedPool:
-    """(node_capacity, edge_capacity, eps) -> TenantBatch map. One pool per
-    registry: tenants that bucket together land in the same lane stack and
-    therefore the same fused programs."""
+    """(node_capacity, edge_capacity, eps, kernel, mesh) -> TenantBatch
+    map. One pool per registry: tenants that bucket together land in the
+    same lane stack and therefore the same fused programs. The mesh is part
+    of the key (a ``jax.sharding.Mesh`` hashes by devices + axis names), so
+    sharded and replicated tenants — or tenants on different meshes —
+    never share a stack: every argument that determines a fused
+    executable's shape or placement must appear here (the RPR501
+    bucket-key completeness rule lints exactly this)."""
 
     def __init__(self):
-        self.batches: dict[tuple[int, int, float, bool], TenantBatch] = {}
+        self.batches: dict[tuple, TenantBatch] = {}
 
     def batch_for(self, node_capacity: int, edge_capacity: int,
-                  eps: float, kernel: bool = False) -> TenantBatch:
+                  eps: float, kernel: bool = False, mesh=None) -> TenantBatch:
         key = (int(node_capacity), int(edge_capacity), float(eps),
-               bool(kernel))
+               bool(kernel), mesh)
         batch = self.batches.get(key)
         if batch is None:
             batch = self.batches[key] = TenantBatch(
-                key[0], key[1], key[2], kernel=key[3])
+                key[0], key[1], key[2], kernel=key[3], mesh=mesh)
         return batch
 
     def place(self, eng: "FusedEngine") -> None:
@@ -424,7 +509,7 @@ class FusedPool:
         buffer capacity — a capacity change (grow/shrink) migrates the
         tenant between buckets (evict + join: two row swaps)."""
         batch = self.batch_for(eng.node_capacity, eng.buffer.capacity,
-                               eng.eps, eng.kernel)
+                               eng.eps, eng.kernel, mesh=eng.mesh)
         if eng.batch is batch:
             return
         if eng.batch is not None:
@@ -448,17 +533,18 @@ class FusedEngine(DeltaEngine):
     def __init__(self, name: str, pool: FusedPool, n_nodes: int,
                  eps: float = 0.0, capacity: int = MIN_CAPACITY,
                  refresh_every: int = 32, pruned: bool = True,
+                 sharded: bool = False, mesh=None,
                  kernel: bool | None = None):
         super().__init__(n_nodes, eps=eps, capacity=capacity,
                          refresh_every=refresh_every, pruned=pruned,
-                         kernel=kernel)
+                         sharded=sharded, mesh=mesh, kernel=kernel)
         self.name = str(name)
         self.pool = pool
         self.batch: TenantBatch | None = None
         self._lane: int | None = None
         self.fused = True
         self.tenant = str(name)
-        self.kind = "fused"
+        self.kind = "fused+sharded" if self.sharded else "fused"
 
     def _audit_shape(self) -> tuple:
         # the lane-stack width is a dispatch-shape determinant for every
@@ -472,7 +558,17 @@ class FusedEngine(DeltaEngine):
         """Materialize this lane's rows as the ``_src``/``_dst``/``_deg``/
         ``_prev_mask`` attributes the inherited host paths read (plan
         rebuild, pruned prepare, cbds). Row slices share the unbatched
-        engines' executable shapes, so those paths stay cache hits."""
+        engines' executable shapes, so those paths stay cache hits; on a
+        sharded bucket the gather runs through ``_make_sharded_row_view``,
+        whose output shardings match ``_make_sharded_resync`` — the
+        inherited sharded entry points see the solo engine's placement."""
+        if self.sharded:
+            batch = self.batch
+            self._src, self._dst, self._deg, self._prev_mask = (
+                _make_sharded_row_view(self.mesh)(
+                    batch._src, batch._dst, batch._deg, batch._prev_mask,
+                    jnp.asarray(self._lane, jnp.int32)))
+            return
         self._src = self.batch._src[self._lane]
         self._dst = self.batch._dst[self._lane]
         self._deg = self.batch._deg[self._lane]
@@ -659,7 +755,7 @@ def _flush_body(batch: TenantBatch, members, refine: bool,
         gp = next_pow2(len(pruned_lanes))
         li = np.full(gp, pruned_lanes[0], np.int32)
         li[: len(pruned_lanes)] = pruned_lanes
-        rows = np.asarray(_rows_gather_jit(batch._deg, jnp.asarray(li)))
+        rows = np.asarray(batch.gather_deg_rows(li))
         deg_rows = {lane: rows[i] for i, lane in enumerate(pruned_lanes)}
     for name, eng in live:
         if eng.pruned:
@@ -677,6 +773,13 @@ def _flush_body(batch: TenantBatch, members, refine: bool,
                     mask_writes.append(
                         (eng._lane, np.asarray(eng._prev_mask)))
                     out[name] = _pruned_result(density, mask, passes)
+                elif (batch.sharded
+                      and prep.plan.bucket_e % batch.n_shards):
+                    # mirror pruned_peel_host's mesh guard: bucket lanes
+                    # that don't shard evenly re-peel unpruned instead
+                    eng.metrics.n_prune_fallbacks += 1
+                    eng._plan = dc_replace(eng._plan, enabled=False)
+                    warm.append((name, eng))
                 else:
                     dispatches.append((name, eng, prep))
             else:
@@ -699,11 +802,18 @@ def _flush_body(batch: TenantBatch, members, refine: bool,
         for i, (_, _, pd) in enumerate(items):
             b_src[i], b_dst[i] = pd.b_src, pd.b_dst
             n_v[i], n_e[i], best[i] = pd.n_v1, pd.n_e1, pd.best_d1
-        d_b, mask_b, passes_b = _batched_bucket_peel_jit(
-            jnp.asarray(b_src), jnp.asarray(b_dst), jnp.asarray(n_v),
-            jnp.asarray(n_e), jnp.asarray(best),
-            jnp.ones(gp, jnp.int32),  # host simulated pass 0 for every lane
-            batch.eps, *buckets, batch.kernel)
+        if batch.sharded:
+            d_b, mask_b, passes_b = _make_sharded_batched_bucket_peel(
+                batch.mesh, batch.eps, *buckets)(
+                    jnp.asarray(b_src), jnp.asarray(b_dst),
+                    jnp.asarray(n_v), jnp.asarray(n_e), jnp.asarray(best),
+                    jnp.ones(gp, jnp.int32))  # host simulated pass 0
+        else:
+            d_b, mask_b, passes_b = _batched_bucket_peel_jit(
+                jnp.asarray(b_src), jnp.asarray(b_dst), jnp.asarray(n_v),
+                jnp.asarray(n_e), jnp.asarray(best),
+                jnp.ones(gp, jnp.int32),  # host simulated pass 0 per lane
+                batch.eps, *buckets, batch.kernel)
         d_b, mask_b = np.asarray(d_b), np.asarray(mask_b)
         passes_b = np.asarray(passes_b)
         for i, (name, eng, pd) in enumerate(items):
@@ -752,7 +862,7 @@ def _flush_body(batch: TenantBatch, members, refine: bool,
         (bk, next_pow2(len(items))) for bk, items in by_buckets.items()))
     audit_shape = (
         batch.node_capacity, batch.edge_capacity, batch.eps, batch.lanes,
-        batch.kernel,
+        batch.kernel, batch.n_shards,
         next_pow2(len(pruned_lanes)) if pruned_lanes else 0,
         next_pow2(len(warm)) if warm else 0,
         bucket_sig,
@@ -782,7 +892,9 @@ def _refine_flush(batch: TenantBatch, members, peel_out,
     lanes = np.full(gp, members[0][1]._lane, np.int32)
     lanes[:g] = [eng._lane for _, eng in members]
     li = jnp.asarray(lanes)
-    src_g, dst_g, deg_g, _ = _lane_gather_jit(
+    gather = (_make_sharded_lane_gather(batch.mesh) if batch.sharded
+              else _lane_gather_jit)
+    src_g, dst_g, deg_g, _ = gather(
         batch._src, batch._dst, batch._deg, batch._prev_mask, li)
     adj_g = _rows_gather_jit(batch._adj, li) if batch.dense else None
 
@@ -826,6 +938,10 @@ def _refine_flush(batch: TenantBatch, members, peel_out,
         if batch.dense:
             loads, bd, be, bv, bm, ps = _batched_dense_refine_round_jit(
                 adj_g, deg_g, ne_j, loads, bd, be, bv, bm, ps, batch.eps)
+        elif batch.sharded:
+            loads, bd, be, bv, bm, ps = _make_sharded_batched_refine_round(
+                batch.mesh, nc, batch.eps)(
+                    src_g, dst_g, deg_g, ne_j, loads, bd, be, bv, bm, ps)
         else:
             loads, bd, be, bv, bm, ps = _batched_refine_round_jit(
                 src_g, dst_g, deg_g, ne_j, loads, bd, be, bv, bm, ps,
@@ -874,9 +990,11 @@ def query_group(engines: dict[str, DeltaEngine], refine: bool = False,
                 target_gap: float | None = None,
                 max_refine_rounds: int = 64) -> dict[str, QueryResult]:
     """Answer a set of tenants' densest-subgraph queries with fused
-    execution wherever possible: fused tenants flush per-bucket (one
-    batched warm peel + one batched bucket peel per plan shape); plain and
-    sharded engines fall back to their own query path. Cached results are
+    execution wherever possible: fused tenants — replicated or sharded —
+    flush per-bucket (one batched warm peel + one batched bucket peel per
+    plan shape); non-fused engines fall back to their own query path; a
+    sharded bucket's flush issues one collective per pass for the whole
+    group. Cached results are
     reused, and stale tenants take their epoch refresh individually first
     (the refresh is epoch-amortized by design).
 
@@ -964,7 +1082,7 @@ def ingest_group(updates: dict[str, tuple], engines: dict[str, DeltaEngine]):
                 compiled = AUDITOR.record(
                     label, "fused_ingest",
                     (batch.node_capacity, batch.edge_capacity, batch.eps,
-                     batch.lanes, batch.kernel, b))
+                     batch.lanes, batch.kernel, batch.n_shards, b))
                 sp.set("n_lanes", len(rows)).set("compiled", compiled)
     return stats
 

@@ -83,6 +83,20 @@ class TenantStats:
     # reductions run through the Pallas segment-sum tier (bit-identical to
     # the scatter tier; the deploy default follows PALLAS_INTERPRET)
     kernel: bool = False
+    # where this tenant's device state lives and how its programs launch:
+    # "solo", "sharded", "fused", or "fused+sharded" (one of the four cells
+    # of the placement matrix — ISSUE 9 unified the last one)
+    placement: str = "solo"
+
+
+def placement_of(eng) -> str:
+    """The placement-matrix cell an engine occupies (fused x sharded)."""
+    fused = bool(getattr(eng, "fused", False))
+    if fused and eng.sharded:
+        return "fused+sharded"
+    if fused:
+        return "fused"
+    return "sharded" if eng.sharded else "solo"
 
 
 class GraphRegistry:
@@ -138,8 +152,10 @@ class GraphRegistry:
         ``fused=True`` opts the tenant into the fused multi-tenant layer
         (stream/fused.py): its device state becomes a lane of the bucket's
         stacked arrays and same-bucket queries batch into one vmapped
-        program, at bit-identical per-tenant results. Fused and sharded
-        are mutually exclusive for now (ROADMAP follow-up).
+        program, at bit-identical per-tenant results. The two compose:
+        ``fused=True, sharded=True`` places the tenant in a mesh-sharded
+        bucket stack whose batched programs run vmap-inside-shard_map —
+        one collective per pass for the whole bucket.
 
         Re-registering with the same logical config is an idempotent no-op;
         a conflicting config raises rather than silently handing back an
@@ -156,10 +172,6 @@ class GraphRegistry:
         want_kernel = resolve_kernel(
             self.default_kernel if kernel is None else kernel
         ) and not want_sharded
-        if want_fused and want_sharded:
-            raise ValueError(
-                "fused multi-tenant execution does not support sharded "
-                "tenants yet; register with one of fused/sharded")
         if name in self._engines:
             eng = self.get(name)
             is_fused = isinstance(eng, FusedEngine)
@@ -189,7 +201,8 @@ class GraphRegistry:
             kernel=want_kernel,
         )
         if want_fused:
-            eng = FusedEngine(name, self.fused_pool, **kwargs)
+            eng = FusedEngine(name, self.fused_pool, sharded=want_sharded,
+                              mesh=self.mesh, **kwargs)
         else:
             eng = DeltaEngine(sharded=want_sharded, mesh=self.mesh, **kwargs)
         eng.tenant = name  # label spans/audit records with the tenant name
@@ -269,10 +282,11 @@ class GraphRegistry:
             query_first_call_ms=m.query_first_call_ms_total,
             query_steady_ms=m.query_steady_ms_total,
             kernel=eng.kernel,
+            placement=placement_of(eng),
         )
 
     def all_stats(self) -> list[TenantStats]:
         return [self.stats(n) for n in self._engines]
 
 
-__all__ = ["GraphRegistry", "TenantStats"]
+__all__ = ["GraphRegistry", "TenantStats", "placement_of"]

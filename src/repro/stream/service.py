@@ -36,7 +36,7 @@ from repro.obs.trace import span
 from repro.stream.buffer import MIN_CAPACITY
 from repro.stream.delta import DeltaEngine
 from repro.stream.fused import ingest_group, query_group
-from repro.stream.registry import GraphRegistry
+from repro.stream.registry import GraphRegistry, placement_of
 
 
 @dataclass
@@ -114,21 +114,27 @@ class StreamService:
                       capacity: int = MIN_CAPACITY,
                       pruned: bool | None = None,
                       sharded: bool | None = None,
+                      fused: bool | None = None,
                       kernel: bool | None = None) -> ServiceResponse:
         """``pruned=False`` opts a tenant back into the PR-1 warm-mask path,
         whose warm_density is an anytime lower bound that can exceed the
         exact density right after deletions (pruned tenants mirror the
         exact result instead). ``sharded=True`` opts the tenant into the
         shard_map engine — its graph spans the service's mesh at identical
-        query results, lifting the one-chip memory cap. ``kernel`` routes
-        the tenant's degree reductions through the Pallas segment-sum tier
+        query results, lifting the one-chip memory cap. ``fused=True``
+        places the tenant in its capacity bucket's lane stack so grouped
+        queries/ingests batch into one program; combined with ``sharded``
+        the bucket's programs run vmap-inside-shard_map (the response's
+        ``placement`` names the resulting cell). ``kernel`` routes the
+        tenant's degree reductions through the Pallas segment-sum tier
         (bit-identical results; None defers to the service default, which
         itself defers to PALLAS_INTERPRET)."""
         with span("service", op="create_tenant", tenant=tenant) as sp:
             try:
                 eng = self.registry.register(tenant, n_nodes, eps=eps,
                                              capacity=capacity, pruned=pruned,
-                                             sharded=sharded, kernel=kernel)
+                                             sharded=sharded, fused=fused,
+                                             kernel=kernel)
             except (ValueError, KeyError) as e:
                 return self._respond("create_tenant", tenant, sp,
                                      error=str(e))
@@ -136,7 +142,8 @@ class StreamService:
                 "create_tenant", tenant, sp,
                 value={"node_capacity": eng.node_capacity,
                        "edge_capacity": eng.buffer.capacity,
-                       "n_shards": eng.n_shards},
+                       "n_shards": eng.n_shards,
+                       "placement": placement_of(eng)},
             )
 
     # -- ingest -------------------------------------------------------------

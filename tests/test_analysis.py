@@ -208,6 +208,31 @@ FIXTURES = [
             return shard_map(body, mesh=mesh, in_specs=(P("edges"),),
                              out_specs=P())
         """),
+    ("RPR501", """
+        class Pool:
+            def __init__(self):
+                self.batches = {}
+
+            def batch_for(self, node_capacity, edge_capacity, eps,
+                          kernel=False, mesh=None):
+                key = (int(node_capacity), int(edge_capacity), float(eps),
+                       bool(kernel))  # mesh missing: sharded tenants alias
+                if key not in self.batches:
+                    self.batches[key] = object()
+                return self.batches[key]
+        """, """
+        class Pool:
+            def __init__(self):
+                self.batches = {}
+
+            def batch_for(self, node_capacity, edge_capacity, eps,
+                          kernel=False, mesh=None):
+                key = (int(node_capacity), int(edge_capacity), float(eps),
+                       bool(kernel), mesh)
+                if key not in self.batches:
+                    self.batches[key] = object()
+                return self.batches[key]
+        """),
 ]
 
 

@@ -119,7 +119,9 @@ class _FakeMesh:
 
 
 def test_sharded_cbds_matches_np():
-    """CBDS on a sharded tenant (single-device re-upload path) == oracle."""
+    """CBDS on a sharded tenant == oracle. The peel inside cbds() runs
+    through the shard_map tier (ISSUE 9 bugfix: it used to re-upload the
+    state to a single device), so this doubles as a routing check."""
     from repro.core.cbds import cbds_np
 
     rng = np.random.default_rng(11)
@@ -231,3 +233,103 @@ def test_sharded_parity_multidevice(devices):
     (they are in fact bit-identical to the single-device engine)."""
     out = run_multidev(MULTIDEV_SCRIPT % devices, devices=devices)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# fused + sharded (ISSUE 9): vmap-inside-shard_map tenant bucket stacks
+# ---------------------------------------------------------------------------
+FUSED_MULTIDEV_SCRIPT = """
+import numpy as np, jax
+from repro.stream.registry import GraphRegistry
+from repro.stream.delta import DeltaEngine
+from repro.stream.fused import FusedEngine, ingest_group, query_group
+from repro.obs.audit import AUDITOR
+
+n_dev = len(jax.devices())
+assert n_dev == %d, n_dev
+N = 96
+reg = GraphRegistry(fused=True, sharded=True)
+names = ["a", "b", "c", "d"]
+solo = {t: DeltaEngine(n_nodes=N) for t in names}
+for t in names:
+    eng = reg.register(t, n_nodes=N)
+    assert isinstance(eng, FusedEngine) and eng.sharded, t
+    assert eng.kind == "fused+sharded" and eng.n_shards == n_dev
+
+
+def step_ups(step, roster):
+    ups = {}
+    for i, t in enumerate(roster):
+        r = np.random.default_rng(100 + 7 * step + i)
+        e = r.integers(0, N, size=(40, 2))
+        e = e[e[:, 0] != e[:, 1]]
+        dele = None
+        if step >= 3:  # from step 3 on, delete ALL of the previous insert
+            prev = np.random.default_rng(
+                100 + 7 * (step - 1) + i).integers(0, N, size=(40, 2))
+            dele = prev[prev[:, 0] != prev[:, 1]]
+        ups[t] = (e, dele)
+    return ups
+
+
+# bit-identity: every tenant of the sharded bucket stack vs its own solo
+# single-device engine, across ingest churn including deletes
+for step in range(8):
+    ups = step_ups(step, names)
+    ingest_group(ups, reg.engines())
+    for t in names:
+        solo[t].apply_updates(insert=ups[t][0], delete=ups[t][1])
+    res = query_group(reg.engines())
+    for t in names:
+        qs = solo[t].query()
+        assert res[t].density == qs.density, (step, t)
+        assert res[t].passes == qs.passes, (step, t)
+        assert np.array_equal(np.asarray(res[t].mask),
+                              np.asarray(qs.mask)), (step, t)
+
+# cbds and fixed-round refinement route through the same sharded batched
+# tier and stay bit-identical to the solo engines
+for t in ["a", "b", "c"]:
+    cf, cs = reg.get(t).cbds(), solo[t].cbds()
+    assert cf["density"] == cs["density"], t
+    assert cf["n_legit"] == cs["n_legit"], t
+rf = query_group({t: reg.get(t) for t in ["a", "b", "c"]},
+                 refine=True, target_gap=-1.0, max_refine_rounds=4)
+for t in ["a", "b", "c"]:
+    rs = solo[t].query(refine=True, target_gap=-1.0, max_refine_rounds=4)
+    assert rf[t].density == rs.density, t
+    assert rf[t].certificate.rel_gap == rs.certificate.rel_gap, t
+
+# steady state on the live mesh: stationary churn must not trip the
+# recompile auditor (a NEW plan-bucket shape may compile once — a
+# first-call event, not a steady-state recompile)
+for step in range(8, 14):
+    ups = step_ups(step, names)
+    ingest_group(ups, reg.engines())
+    query_group(reg.engines())
+AUDITOR.sync()
+assert AUDITOR.n_steady_recompiles == 0, AUDITOR.snapshot(last=20)
+
+# join/evict churn: swapping a same-shape tenant into the warm bucket is a
+# lane-row swap, not a compile event — ingest+query over the full roster
+# (the warmed 4-lane group shape) stays strictly flat
+reg.remove("d")
+reg.register("e", n_nodes=N)
+c0 = DeltaEngine.compile_count()
+ups = step_ups(1, ["a", "b", "c", "e"])
+ingest_group(ups, reg.engines())
+query_group(reg.engines())
+c1 = DeltaEngine.compile_count()
+assert c1 == c0, (c0, c1)
+print("OK fused+sharded")
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_fused_sharded_parity_multidevice(devices):
+    """ISSUE 9 acceptance: fused+sharded tenants (vmap-inside-shard_map
+    bucket stacks) return per-tenant results bit-identical to the solo
+    single-device engine on forced multi-device meshes, with zero audited
+    steady-state recompiles and compile-free join/evict on the live mesh."""
+    out = run_multidev(FUSED_MULTIDEV_SCRIPT % devices, devices=devices)
+    assert "OK fused+sharded" in out

@@ -110,6 +110,40 @@ def test_fused_sparse_bucket_parity():
     assert np.array_equal(q1.mask, q2.mask)
 
 
+def test_fused_sharded_bucket_parity_one_device():
+    """ISSUE 9: fused+sharded tenants share a mesh-sharded bucket stack
+    whose batched programs run vmap-inside-shard_map — on the in-process
+    1-device mesh every tenant stays bit-identical to its solo twin, and
+    cbds routes through the same sharded tier (the multi-device version of
+    this oracle lives in tests/test_shard.py subprocesses)."""
+    rng = np.random.default_rng(9)
+    n = 150
+    reg = GraphRegistry(fused=True, sharded=True)
+    names = ["a", "b", "c"]
+    solo, edge_sets = {}, {}
+    for t in names:
+        eng = reg.register(t, n_nodes=n)
+        assert eng.sharded and eng.kind == "fused+sharded"
+        solo[t] = DeltaEngine(n_nodes=n, refresh_every=32)
+        edge_sets[t] = set()
+    for step in range(6):
+        ups = {}
+        for t in names:
+            ins, dels = _churn(rng, n, edge_sets[t])
+            ups[t] = (ins, dels)
+            solo[t].apply_updates(insert=ins, delete=dels)
+        ingest_group(ups, reg.engines())
+        res = query_group(reg.engines())
+        for t in names:
+            qs = solo[t].query()
+            assert res[t].density == qs.density, (step, t)
+            assert res[t].passes == qs.passes, (step, t)
+            assert np.array_equal(np.asarray(res[t].mask), qs.mask), (step, t)
+    for t in names:
+        cf, cs = reg.get(t).cbds(), solo[t].cbds()
+        assert cf["density"] == cs["density"] and cf["n_legit"] == cs["n_legit"]
+
+
 def test_fused_capacity_migration_rebuckets():
     """A buffer regrow moves the tenant to the matching capacity bucket
     (evict + join) with exact results on the other side."""
@@ -315,9 +349,17 @@ def test_registry_fused_roster_and_conflicts():
     # conflicting fused flag on re-register raises
     with pytest.raises(ValueError, match="fused"):
         reg.register("a", n_nodes=100, fused=False)
-    # fused + sharded is rejected up front
-    with pytest.raises(ValueError, match="sharded"):
-        reg.register("b", n_nodes=100, sharded=True)
+    # fused + sharded composes (ISSUE 9): accepted, placed in a sharded
+    # bucket stack, with the placement surfaced in the stats
+    b = reg.register("b", n_nodes=100, sharded=True)
+    assert isinstance(b, FusedEngine) and b.sharded
+    assert b.kind == "fused+sharded"
+    b.apply_updates(insert=np.array([[0, 1], [1, 2]]))
+    b.query()
+    st_b = reg.stats("b")
+    assert st_b.fused and st_b.sharded and st_b.placement == "fused+sharded"
+    assert st_b.lane >= 0
+    reg.remove("b")
     # LRU eviction releases the lane back to the bucket
     batch = a.batch
     reg.register("c", n_nodes=100)
