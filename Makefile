@@ -7,15 +7,16 @@ COV_TESTS := tests/test_core_algorithms.py tests/test_core_density.py \
 	tests/test_distributed.py tests/test_graphs.py tests/test_stream.py \
 	tests/test_prune.py tests/test_oracle_properties.py tests/test_shard.py \
 	tests/test_tenants.py tests/test_refine.py tests/test_obs.py \
-	tests/test_kernels.py tests/test_analysis.py
+	tests/test_telemetry.py tests/test_kernels.py tests/test_analysis.py
 
 .PHONY: test coverage lint lint-invariants bench-smoke bench-prune-smoke \
 	bench-shard-smoke \
 	bench-tenants-smoke bench-refine-smoke bench-density-smoke \
-	bench-epsilon-smoke bench-kernels-smoke bench-check bench-baseline \
+	bench-epsilon-smoke bench-kernels-smoke bench-obs-smoke scrape-smoke \
+	bench-check bench-baseline \
 	bench-stream-large bench-shard-large bench-tenants-large \
 	bench-check-large bench-baseline-large \
-	bench metrics-demo deps-dev
+	bench metrics-demo metrics-serve-demo deps-dev
 
 test:
 	$(PY) -m pytest -x -q
@@ -74,6 +75,21 @@ bench-epsilon-smoke:
 bench-kernels-smoke:
 	$(PY) benchmarks/bench_kernels.py --smoke --emit-metrics
 
+# mesh-wide telemetry plane (ISSUE 10): three real worker processes spool
+# AND push to a collector; fleet quantiles must be bit-identical to the
+# pooled oracle, both transports must agree, /metrics must lint (the
+# forced 4-device mesh makes each worker a multi-device process, the
+# topology the collector exists for). Writes FLEET_snapshot.json.
+bench-obs-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PY) benchmarks/bench_obs.py --smoke --emit-metrics
+
+# scrape endpoint over a live worker: /metrics lints (adversarial tenant
+# names round-trip the label escaping), /slo + /snapshot well-formed,
+# zero steady recompiles with the server up, clean shutdown
+scrape-smoke:
+	$(PY) benchmarks/scrape_smoke.py
+
 # benchmark-trajectory gate: compare the BENCH_*.json files the smokes
 # wrote against the committed baseline (>25% regression fails)
 bench-check:
@@ -118,6 +134,13 @@ bench:
 # finishing with the Prometheus exposition-format dump of the run
 metrics-demo:
 	$(PY) examples/streaming_fraud.py --emit-metrics
+
+# same demo through the live telemetry plane: the operator loop reads
+# burn-rate alerts from the real /slo endpoint each step (an impossible
+# latency objective pages, the 8s headroom one stays green) and the final
+# /metrics scrape is linted as exposition text
+metrics-serve-demo:
+	$(PY) examples/streaming_fraud.py --serve-metrics --emit-metrics
 
 deps-dev:
 	pip install -r requirements-dev.txt

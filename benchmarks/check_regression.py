@@ -71,6 +71,14 @@ GATES = {
     "refine": {"certified_quality_min": ("higher", QUALITY_TOL),
                "fused_refine_speedup_8": "higher",
                "steady_compiles": "zero"},
+    # mesh-wide telemetry plane (ISSUE 10): every gate is a deterministic
+    # failure count — fleet merges must be bit-identical to the pooled
+    # oracle, both transports must agree, and /metrics must lint — so the
+    # whole bench hard-fails on any non-zero, no baseline entry needed
+    "obs": {"merge_mismatches": "zero",
+            "transport_mismatches": "zero",
+            "scrape_lint_errors": "zero",
+            "steady_compiles": "zero"},
 }
 
 

@@ -11,6 +11,8 @@
   bench_tenants  — fused multi-tenant: batched peels vs sequential dispatch
   bench_refine   — near-optimal refinement: duality-gap closure + fused
                    batched rounds vs sequential per-tenant refinement
+  bench_obs      — mesh-wide telemetry plane: worker processes -> collector
+                   merge exactness, transport parity, scrape lint
 """
 from __future__ import annotations
 
@@ -19,9 +21,9 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_density, bench_epsilon, bench_kernels,
-                            bench_prune, bench_refine, bench_roofline,
-                            bench_scaling, bench_shard, bench_stream,
-                            bench_tenants)
+                            bench_obs, bench_prune, bench_refine,
+                            bench_roofline, bench_scaling, bench_shard,
+                            bench_stream, bench_tenants)
     for name, fn in [
         ("bench_density (paper Table 3)", bench_density.main),
         ("bench_epsilon (paper Table 2)", bench_epsilon.main),
@@ -33,6 +35,7 @@ def main() -> None:
         ("bench_shard (sharded streaming)", bench_shard.main),
         ("bench_tenants (fused multi-tenant)", bench_tenants.main),
         ("bench_refine (near-optimal refinement)", bench_refine.main),
+        ("bench_obs (mesh-wide telemetry plane)", bench_obs.main),
     ]:
         print(f"\n=== {name} ===")
         t0 = time.time()

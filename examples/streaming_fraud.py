@@ -8,8 +8,20 @@ the membership mask and recovers the ring — no rebuilds, no recompiles,
 exact densities (the incremental engine equals a from-scratch recompute).
 
   PYTHONPATH=src python examples/streaming_fraud.py
+
+With ``--serve-metrics`` the operator loop runs against the live scrape
+endpoint instead of in-process dicts (mesh-wide telemetry plane,
+ISSUE 10): the service binds an HTTP port, and each step the loop GETs
+``/slo`` — multi-window burn-rate alerts computed from the exact latency
+bucket counts — alongside the density alarm. A deliberately impossible
+latency objective pages within the demo's tiny windows (proving the
+fast+slow window logic end-to-end over HTTP) while the realistic
+objective stays green; ``/metrics`` is linted as genuine Prometheus
+exposition text at the end.
 """
+import json
 import sys
+import urllib.request
 
 sys.path.insert(0, "src")
 
@@ -34,11 +46,41 @@ def ring_batch(rng, ring_ids, size=60):
     return np.stack([ring_ids[idx[:, 0]], ring_ids[idx[:, 1]]], axis=1)
 
 
+def scrape_json(url: str):
+    with urllib.request.urlopen(url, timeout=5) as resp:
+        return json.load(resp)
+
+
 def main():
     rng = np.random.default_rng(7)
     svc = StreamService(max_tenants=8, refresh_every=50)
     for region in ("payments-us", "payments-eu"):
         svc.create_tenant(region, n_nodes=N_ACCOUNTS, capacity=1 << 14)
+
+    server = None
+    slo_pages: set[str] = set()
+    if "--serve-metrics" in sys.argv:
+        # mesh-wide telemetry plane: the operator loop reads the live
+        # scrape endpoint instead of in-process dicts. Two objectives on
+        # the same exact latency buckets: an impossible one (threshold
+        # below the smallest bucket edge, so every query is "bad") that
+        # must page within the demo's sub-second windows, and a generous
+        # 4s one that must stay green — paging the first but not the
+        # second proves the multi-window burn-rate math end-to-end over
+        # HTTP, not just which side of a constant the latency landed on.
+        from repro.obs import BurnRatePolicy, SloMonitor
+
+        demo_windows = dict(fast_windows_s=(0.25, 1.0),
+                            slow_windows_s=(0.5, 2.0))
+        monitor = SloMonitor(policies=(
+            BurnRatePolicy(name="latency_impossible", threshold_ms=0.0005,
+                           **demo_windows),
+            BurnRatePolicy(name="latency_headroom", threshold_ms=8192.0,
+                           **demo_windows),
+        ))
+        server = svc.serve_metrics(port=0, slo=monitor)
+        print(f"scrape endpoint live at {server.url} "
+              f"(/metrics /snapshot /slo)")
 
     ring_ids = rng.choice(N_ACCOUNTS, RING, replace=False)
     history: dict[str, list[float]] = {}
@@ -67,6 +109,10 @@ def main():
                 alerted.add(row["tenant"])
             hist.append(row["density"])
         top = board[0]
+        if server is not None:
+            # scraping IS the sampling cadence: each GET appends one
+            # cumulative (good, total) integer pair per (policy, tenant)
+            slo_pages.update(scrape_json(f"{server.url}/slo")["paging"])
         print(f"step {step:2d}  top={top['tenant']:12s} "
               f"rho={top['density']:6.3f}  "
               f"{'<-- ALERT' if alerts and alerts[-1][0] == step else ''}")
@@ -90,6 +136,25 @@ def main():
           f"{st.n_refreshes} epoch refreshes, "
           f"{DeltaEngine.compile_count()} executables compiled total")
     assert recall >= 0.9, "ring recovery failed"
+
+    if server is not None:
+        from repro.obs import parse_prometheus_text
+
+        paged = {p.split("/", 1)[0] for p in slo_pages}
+        assert "latency_impossible" in paged, \
+            f"impossible objective never paged: {sorted(slo_pages)}"
+        assert "latency_headroom" not in paged, \
+            f"headroom objective paged: {sorted(slo_pages)}"
+        samples = parse_prometheus_text(
+            urllib.request.urlopen(f"{server.url}/metrics",
+                                   timeout=5).read().decode())
+        health = scrape_json(f"{server.url}/snapshot")
+        assert health["audit"]["audited_steady_recompiles"] == 0
+        print(f"slo: impossible objective paged on "
+              f"{sorted(p.split('/', 1)[1] for p in slo_pages)}, "
+              f"8s headroom objective stayed green; "
+              f"/metrics lint ok ({len(samples)} samples)")
+        svc.shutdown()
 
     if "--emit-metrics" in sys.argv:
         # `make metrics-demo` path: dump the run's metric registry in

@@ -68,4 +68,25 @@ def serve_batch(params: dict, cfg: TransformerConfig, prompts: np.ndarray,
                       outputs=np.stack([np.asarray(t) for t in out], axis=1))
 
 
-__all__ = ["serve_batch", "ServeStats"]
+def serve_metrics_endpoint(port: int = 0, host: str = "127.0.0.1",
+                           service=None, collector=None, slo=None):
+    """Expose this serve process's telemetry on a real scrape endpoint
+    (mesh-wide telemetry plane, ISSUE 10): ``/metrics`` Prometheus text,
+    ``/snapshot`` JSON, ``/slo`` burn-rate alerts. With no arguments it
+    serves the process-default obs registry — one line turns any launch
+    into a scrapeable worker:
+
+        server = serve_metrics_endpoint(port=9100)
+        ... serve traffic; curl http://host:9100/metrics ...
+        server.close()
+
+    Pass a ``StreamService`` to serve its per-tenant SLO snapshot, or a
+    ``repro.obs.Collector`` to serve the merged fleet view instead.
+    Returns the live server (``.url``, ``.port``, ``.close()``)."""
+    from repro.obs.scrape import serve_metrics
+
+    return serve_metrics(service=service, collector=collector, slo=slo,
+                         host=host, port=port)
+
+
+__all__ = ["serve_batch", "serve_metrics_endpoint", "ServeStats"]

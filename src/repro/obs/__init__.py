@@ -1,9 +1,24 @@
 """repro.obs — unified observability: spans, exact-rank metrics, recompile
-audit, and Prometheus/JSON export. Host-side only by construction: nothing
-here dispatches to jax, so enabling tracing cannot change results or add
-steady-state recompiles (asserted in tests/test_obs.py)."""
+audit, Prometheus/JSON export, and the mesh-wide telemetry plane
+(cross-process collector, scrape endpoint, OTLP export, SLO burn-rate
+alerts). Host-side only by construction: nothing here dispatches to jax,
+so enabling tracing — or running a live scrape server and collector push —
+cannot change results or add steady-state recompiles (asserted in
+tests/test_obs.py and tests/test_telemetry.py)."""
 from repro.obs.audit import AUDITOR, AuditRecord, RecompileAuditor
-from repro.obs.export import prometheus_text, service_snapshot, snapshot, write_json
+from repro.obs.collector import Collector, CollectorServer, push_snapshot, write_spool
+from repro.obs.export import (
+    escape_label_value,
+    parse_prometheus_text,
+    prometheus_text,
+    service_snapshot,
+    snapshot,
+    unescape_label_value,
+    write_json,
+)
+from repro.obs.otlp import OtlpExporter, otel_available
+from repro.obs.scrape import MetricsServer, serve_metrics
+from repro.obs.slo import BurnRatePolicy, SloMonitor, burn_exceeds
 from repro.obs.metrics import (
     DEFAULT_LATENCY_BOUNDS_MS,
     Counter,
@@ -26,8 +41,13 @@ from repro.obs.trace import (
 __all__ = [
     "AUDITOR", "AuditRecord", "RecompileAuditor",
     "prometheus_text", "service_snapshot", "snapshot", "write_json",
+    "escape_label_value", "unescape_label_value", "parse_prometheus_text",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "DEFAULT_LATENCY_BOUNDS_MS",
     "NOOP_SPAN", "Span", "SpanRecord", "Tracer",
     "configure", "get_tracer", "set_tracer", "span", "read_jsonl",
+    "Collector", "CollectorServer", "push_snapshot", "write_spool",
+    "MetricsServer", "serve_metrics",
+    "BurnRatePolicy", "SloMonitor", "burn_exceeds",
+    "OtlpExporter", "otel_available",
 ]

@@ -22,10 +22,35 @@ from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
 from repro.obs.trace import get_tracer
 
 
+def escape_label_value(v) -> str:
+    """Escape a label value per the Prometheus exposition format: backslash
+    first (so escapes don't double-escape), then double-quote and newline.
+    Tenant names are caller-controlled strings, so an unescaped ``"`` or
+    ``\\n`` would emit malformed exposition text a scraper rejects."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def unescape_label_value(v: str) -> str:
+    """Inverse of :func:`escape_label_value` (the round-trip oracle)."""
+    out, i = [], 0
+    while i < len(v):
+        c = v[i]
+        if c == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append({"\\": "\\", '"': '"', "n": "\n"}.get(nxt, c + nxt))
+            i += 2
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
 def _labels_text(labels: dict) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    inner = ",".join(f'{k}="{escape_label_value(v)}"'
+                     for k, v in sorted(labels.items()))
     return "{" + inner + "}"
 
 
@@ -62,6 +87,86 @@ def prometheus_text(registry: MetricsRegistry | None = None) -> str:
             lines.append(f"{name}_sum{_labels_text(m.labels)} {_fmt(m.sum)}")
             lines.append(f"{name}_count{_labels_text(m.labels)} {m.total}")
     return "\n".join(lines) + "\n"
+
+
+def parse_prometheus_text(text: str) -> list:
+    """Strict exposition-format parse: the lint the scrape smoke and tests
+    run over ``/metrics`` output. Returns ``[(name, labels, value)]``
+    samples with label values *unescaped*; raises ``ValueError`` on any
+    malformed line (bad metric name, unterminated label quote, unknown
+    TYPE, non-numeric sample value). A successful parse of
+    ``prometheus_text()`` therefore proves the escaping round-trips."""
+    import re
+
+    name_re = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+    samples = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 2 and parts[1] == "TYPE":
+                if len(parts) != 4 or not name_re.match(parts[2]) or \
+                        parts[3] not in ("counter", "gauge", "histogram",
+                                         "summary", "untyped"):
+                    raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
+            continue
+        # sample line: name[{labels}] value
+        brace = line.find("{")
+        if brace == -1:
+            try:
+                name, value = line.rsplit(" ", 1)
+            except ValueError:
+                raise ValueError(f"line {lineno}: malformed sample: {line!r}")
+            labels = {}
+        else:
+            name = line[:brace]
+            # scan the label block honoring \" escapes inside values
+            i, labels, end = brace + 1, {}, None
+            while i < len(line):
+                if line[i] == "}":
+                    end = i
+                    break
+                eq = line.find("=", i)
+                if eq == -1 or line[eq + 1] != '"':
+                    raise ValueError(
+                        f"line {lineno}: malformed label pair: {line!r}")
+                key = line[i:eq].lstrip(",")
+                if not name_re.match(key):
+                    raise ValueError(
+                        f"line {lineno}: bad label name {key!r}")
+                j = eq + 2
+                raw = []
+                while j < len(line):
+                    c = line[j]
+                    if c == "\\":
+                        raw.append(line[j:j + 2])
+                        j += 2
+                        continue
+                    if c == '"':
+                        break
+                    if c == "\n":  # cannot happen post-splitlines; guard
+                        raise ValueError(
+                            f"line {lineno}: newline inside label value")
+                    raw.append(c)
+                    j += 1
+                else:
+                    raise ValueError(
+                        f"line {lineno}: unterminated label value: {line!r}")
+                labels[key] = unescape_label_value("".join(raw))
+                i = j + 1
+            if end is None:
+                raise ValueError(
+                    f"line {lineno}: unterminated label block: {line!r}")
+            value = line[end + 1:].strip()
+        if not name_re.match(name):
+            raise ValueError(f"line {lineno}: bad metric name {name!r}")
+        try:
+            val = float(value)
+        except ValueError:
+            raise ValueError(f"line {lineno}: non-numeric value {value!r}")
+        samples.append((name, labels, val))
+    return samples
 
 
 def snapshot(registry: MetricsRegistry | None = None) -> dict:
@@ -112,6 +217,9 @@ def service_snapshot(service) -> dict:
         }
     out = snapshot(reg)
     out["tenants"] = tenants
+    # worker identity: the collector re-keys tenants by (worker, tenant)
+    # when aggregating snapshots pushed from many processes
+    out["worker"] = getattr(service, "worker", None)
     return out
 
 
@@ -126,4 +234,6 @@ def write_json(path: str, data: dict | None = None) -> dict:
     return data
 
 
-__all__ = ["prometheus_text", "snapshot", "service_snapshot", "write_json"]
+__all__ = ["prometheus_text", "snapshot", "service_snapshot", "write_json",
+           "escape_label_value", "unescape_label_value",
+           "parse_prometheus_text"]

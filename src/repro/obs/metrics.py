@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import math
 import threading
+import time
 from bisect import bisect_left
 from dataclasses import dataclass, field
 
@@ -53,14 +54,19 @@ class Counter:
 
 @dataclass
 class Gauge:
-    """Last-value gauge (float)."""
+    """Last-value gauge (float). ``updated_at`` (epoch seconds of the last
+    ``set``) is the freshness signal the SLO layer alarms on: a
+    certified-gap gauge that stops moving means certificates stopped being
+    produced, which is an outage even when the last value looks healthy."""
 
     name: str
     labels: dict
     value: float = 0.0
+    updated_at: float = 0.0
 
     def set(self, v: float) -> None:
         self.value = float(v)
+        self.updated_at = time.time()
 
 
 @dataclass
@@ -112,7 +118,11 @@ class Histogram:
 
     def merged(self, other: "Histogram") -> "Histogram":
         """Sum of two same-bound histograms (exact: integer bucket adds) —
-        used to aggregate one tenant's series across engine paths."""
+        used to aggregate one tenant's series across engine paths, and by
+        the cross-process collector to pool worker histograms into exact
+        fleet-level quantiles. Commutative and associative by construction
+        (integer adds), so merge order across workers cannot change a
+        reported quantile (property-tested in tests/test_telemetry.py)."""
         if other.bounds != self.bounds:
             raise ValueError("cannot merge histograms with different bounds")
         out = Histogram(self.name, dict(self.labels), self.bounds,
@@ -120,6 +130,24 @@ class Histogram:
                         self.total + other.total, self.sum + other.sum,
                         max(self.max_value, other.max_value))
         return out
+
+    def to_dict(self) -> dict:
+        """JSON-ready dump carrying the full integer bucket state — the
+        wire format the cross-process collector merges (obs/collector.py).
+        Round-trips through :meth:`from_dict` without loss."""
+        return {"name": self.name, "labels": dict(self.labels),
+                "count": self.total, "sum": self.sum, "max": self.max_value,
+                "bounds": list(self.bounds),
+                "bucket_counts": list(self.counts),
+                "quantiles": self.quantiles()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Histogram":
+        """Rebuild a histogram from a :meth:`to_dict` / ``snapshot()``
+        entry (exact: the bucket counts are the state)."""
+        return cls(d["name"], dict(d.get("labels", {})),
+                   tuple(d["bounds"]), [int(c) for c in d["bucket_counts"]],
+                   int(d["count"]), float(d["sum"]), float(d["max"]))
 
 
 class MetricsRegistry:
@@ -149,6 +177,13 @@ class MetricsRegistry:
                   **labels) -> Histogram:
         kwargs = {"bounds": tuple(bounds)} if bounds is not None else {}
         return self._get(Histogram, name, labels, **kwargs)
+
+    def install(self, metric: "Counter | Gauge | Histogram") -> None:
+        """Adopt an already-built metric (the collector's reconstruction
+        path); replaces any series with the same (kind, name, labels)."""
+        key = (type(metric).__name__, metric.name, _label_key(metric.labels))
+        with self._lock:
+            self._metrics[key] = metric
 
     # -- bulk access ---------------------------------------------------------
     def metrics(self) -> list:
@@ -183,14 +218,10 @@ class MetricsRegistry:
                                  "value": m.value})
             elif isinstance(m, Gauge):
                 gauges.append({"name": m.name, "labels": m.labels,
-                               "value": m.value})
+                               "value": m.value,
+                               "updated_at": m.updated_at})
             else:
-                hists.append({"name": m.name, "labels": m.labels,
-                              "count": m.total, "sum": m.sum,
-                              "max": m.max_value,
-                              "bounds": list(m.bounds),
-                              "bucket_counts": list(m.counts),
-                              "quantiles": m.quantiles()})
+                hists.append(m.to_dict())
         return {"counters": counters, "gauges": gauges, "histograms": hists}
 
     def reset(self) -> None:

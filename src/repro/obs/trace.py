@@ -163,7 +163,9 @@ class Tracer:
 
     def __init__(self, registry: MetricsRegistry | None = None,
                  ring_size: int = 2048, jsonl_path: str | None = None,
-                 profiler_bridge: bool = True, enabled: bool = True):
+                 profiler_bridge: bool = True, enabled: bool = True,
+                 jsonl_max_bytes: int | None = None,
+                 jsonl_backups: int = 1):
         self.registry = registry if registry is not None else MetricsRegistry()
         self.enabled = bool(enabled)
         self.profiler_bridge = bool(profiler_bridge)
@@ -172,6 +174,14 @@ class Tracer:
         self._ids = itertools.count()
         self._jsonl_path = jsonl_path
         self._jsonl_file = None
+        # size-capped rotation: without it a long-running serve_metrics
+        # deployment appends spans forever and fills the disk. When the
+        # active file passes ``jsonl_max_bytes`` it rotates to
+        # ``<path>.1`` .. ``<path>.N`` (oldest dropped), so the sink holds
+        # at most ~(backups + 1) * max_bytes on disk.
+        self._jsonl_max_bytes = (None if jsonl_max_bytes is None
+                                 else int(jsonl_max_bytes))
+        self._jsonl_backups = max(0, int(jsonl_backups))
 
     # -- the API -------------------------------------------------------------
     def span(self, name: str, **labels):
@@ -195,6 +205,27 @@ class Tracer:
             self._jsonl_file.close()
             self._jsonl_file = None
 
+    def _rotate_jsonl(self) -> None:
+        """Shift ``path -> path.1 -> ... -> path.N`` (drop past N) and
+        reopen a fresh active file. With ``jsonl_backups=0`` the full file
+        is simply truncated — the ring still holds the recent spans."""
+        import os
+
+        self.close()
+        path = self._jsonl_path
+        last = f"{path}.{self._jsonl_backups}"
+        if os.path.exists(last):
+            os.remove(last)
+        for i in range(self._jsonl_backups - 1, 0, -1):
+            src = f"{path}.{i}"
+            if os.path.exists(src):
+                os.replace(src, f"{path}.{i + 1}")
+        if self._jsonl_backups > 0:
+            os.replace(path, f"{path}.1")
+        else:
+            os.remove(path)
+        self._jsonl_file = open(path, "a")
+
     # -- recording -----------------------------------------------------------
     def _record(self, sp: Span) -> None:
         rec = SpanRecord(span_id=sp.span_id, parent_id=sp.parent_id,
@@ -207,6 +238,9 @@ class Tracer:
                 self._jsonl_file = open(self._jsonl_path, "a")
             self._jsonl_file.write(json.dumps(rec.to_json()) + "\n")
             self._jsonl_file.flush()
+            if (self._jsonl_max_bytes is not None
+                    and self._jsonl_file.tell() >= self._jsonl_max_bytes):
+                self._rotate_jsonl()
         reg = self.registry
         if not reg.enabled:
             return

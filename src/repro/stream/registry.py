@@ -87,6 +87,11 @@ class TenantStats:
     # "solo", "sharded", "fused", or "fused+sharded" (one of the four cells
     # of the placement matrix — ISSUE 9 unified the last one)
     placement: str = "solo"
+    # which worker process hosts this tenant (mesh-wide telemetry plane,
+    # ISSUE 10): the cross-process collector re-keys tenants by
+    # (worker, tenant), so the same tenant name on two workers stays
+    # distinct in the fleet view
+    worker: str = ""
 
 
 def placement_of(eng) -> str:
@@ -105,10 +110,13 @@ class GraphRegistry:
     def __init__(self, max_tenants: int = 64, eps: float = 0.0,
                  refresh_every: int = 32, pruned: bool = True,
                  sharded: bool = False, mesh=None, fused: bool = False,
-                 kernel: bool | None = None):
+                 kernel: bool | None = None, worker: str = ""):
         if max_tenants <= 0:
             raise ValueError("max_tenants must be >= 1")
         self.max_tenants = int(max_tenants)
+        # worker identity for cross-process telemetry (surfaced per tenant
+        # in TenantStats.worker; the service defaults it to the pid)
+        self.worker = str(worker)
         self.default_eps = float(eps)
         self.default_refresh_every = int(refresh_every)
         self.default_pruned = bool(pruned)
@@ -283,6 +291,7 @@ class GraphRegistry:
             query_steady_ms=m.query_steady_ms_total,
             kernel=eng.kernel,
             placement=placement_of(eng),
+            worker=self.worker,
         )
 
     def all_stats(self) -> list[TenantStats]:

@@ -67,13 +67,22 @@ class StreamService:
                  refresh_every: int = 32, pruned: bool = True,
                  sharded: bool = False, mesh=None, fused: bool = False,
                  kernel: bool | None = None,
-                 coalesce_window_ms: float = 0.0):
+                 coalesce_window_ms: float = 0.0,
+                 worker: str | None = None):
+        # worker identity: labels this process's snapshots when they are
+        # pushed/spooled to a cross-process collector (repro.obs.collector
+        # re-keys tenants by (worker, tenant)); defaults to the pid so two
+        # unconfigured workers never alias
+        import os
+
+        self.worker = worker if worker else f"w{os.getpid()}"
         self.registry = GraphRegistry(
             max_tenants=max_tenants, eps=eps, refresh_every=refresh_every,
             pruned=pruned, sharded=sharded, mesh=mesh, fused=fused,
-            kernel=kernel,
+            kernel=kernel, worker=self.worker,
         )
         self.metrics = ServiceMetrics()
+        self._metrics_server = None
         # query coalescing: pending (ticket, tenant, t_submit) triples are
         # flushed together so same-bucket fused tenants share one batched
         # peel; window <= 0 degenerates to flush-per-submit
@@ -311,11 +320,15 @@ class StreamService:
     def shutdown(self) -> int:
         """Flush any pending coalesced queries and refuse new submissions.
         Idempotent; returns how many pending queries the final flush
-        answered (their results stay pollable)."""
+        answered (their results stay pollable). Also closes the scrape
+        endpoint if ``serve_metrics`` started one."""
         if self._closed:
             return 0
         flushed = self.flush()
         self._closed = True
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None
         return flushed
 
     # -- observability ------------------------------------------------------
@@ -339,6 +352,41 @@ class StreamService:
         from repro.obs.export import service_snapshot
 
         return service_snapshot(self)
+
+    def serve_metrics(self, port: int = 0, host: str = "127.0.0.1",
+                      slo=None):
+        """Start (or return) the HTTP scrape endpoint for this worker:
+        ``/metrics`` (Prometheus text), ``/snapshot`` (the
+        ``metrics_snapshot()`` JSON), ``/slo`` (multi-window burn-rate
+        view — repro.obs.slo), ``/healthz``. ``port=0`` binds an
+        ephemeral port; the returned server exposes ``.url`` / ``.port``
+        / ``.close()`` and is closed automatically by ``shutdown()``.
+        Handling a scrape is host-side only — a live endpoint cannot
+        change engine results or compile caches (tests/test_telemetry.py
+        asserts oracle parity with the server up)."""
+        if self._metrics_server is None:
+            from repro.obs.scrape import serve_metrics as _serve
+
+            self._metrics_server = _serve(service=self, slo=slo,
+                                          host=host, port=port)
+        return self._metrics_server
+
+    def push_snapshot(self, address: tuple) -> bool:
+        """Push this worker's snapshot to a ``CollectorServer`` at
+        ``(host, port)`` — labeled with ``self.worker``. Returns False
+        (never raises) when the collector is unreachable: telemetry push
+        must not take serving down."""
+        from repro.obs.collector import push_snapshot as _push
+
+        return _push(address, self.worker, self.metrics_snapshot())
+
+    def spool_snapshot(self, spool_dir: str) -> str:
+        """Atomically write this worker's snapshot into a collector spool
+        directory (``<dir>/<worker>.json``); returns the path. The
+        file-transport counterpart of :meth:`push_snapshot`."""
+        from repro.obs.collector import write_spool
+
+        return write_spool(spool_dir, self.worker, self.metrics_snapshot())
 
 
 __all__ = ["StreamService", "ServiceResponse", "ServiceMetrics"]
